@@ -1,0 +1,30 @@
+"""Shared benchmark helpers: timing, CSV emission, slope fits."""
+from __future__ import annotations
+
+import math
+import os
+import time
+from typing import Callable, Dict, List
+
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def loglog_slope(xs: List[float], ys: List[float]) -> float:
+    lx = [math.log(x) for x in xs]
+    ly = [math.log(max(y, 1e-12)) for y in ys]
+    n = len(xs)
+    mx, my = sum(lx) / n, sum(ly) / n
+    num = sum((a - mx) * (b - my) for a, b in zip(lx, ly))
+    den = sum((a - mx) ** 2 for a in lx)
+    return num / den
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0)

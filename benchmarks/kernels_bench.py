@@ -1,0 +1,64 @@
+"""Kernel-layer microbenchmark: fused Pallas g-statistics vs the unfused
+jnp path.  On this CPU container the Pallas kernels execute in interpret
+mode, so the *wall-clock* comparison that matters is the jnp-fused vs
+jnp-unfused path (the HBM-traffic argument for the TPU kernel is made in
+the kernel docstrings and EXPERIMENTS.md §Roofline); the Pallas call is
+timed to confirm interpret-mode validity, not speed."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.banditpam import _build_g
+from repro.core.distances import l2
+from repro.kernels import ops, ref
+
+from .common import FULL, emit
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                     # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    n, b, d = (4096, 512, 784) if FULL else (1024, 256, 784)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((b, d)).astype(np.float32))
+    dn = jnp.asarray(rng.uniform(0.5, 2.0, b).astype(np.float32))
+    w = jnp.ones((b,), jnp.float32)
+
+    @jax.jit
+    def unfused(x, y, dn, w):
+        dxy = l2(x, y)                       # [n, b] materialized
+        g = _build_g(dxy, dn) * w[None]
+        return g.sum(1), (g * g).sum(1)
+
+    @jax.jit
+    def fused_jnp(x, y, dn, w):              # same math, fused by XLA
+        g = _build_g(l2(x, y), dn) * w[None]
+        return g.sum(1), (g * g).sum(1)
+
+    t_un = _time(unfused, x, y, dn, w)
+    emit("kernel_build_g_jnp", t_un * 1e6, f"n={n};b={b};d={d}")
+    t_pallas = _time(lambda: ops.build_g_stats(x, y, dn, w, metric="l2",
+                                               interpret=True)[0])
+    emit("kernel_build_g_pallas_interpret", t_pallas * 1e6,
+         "correctness-mode (CPU interpret); TPU perf via VMEM-fusion design")
+    # correctness cross-check as part of the bench
+    s_p, q_p, _ = ops.build_g_stats(x, y, dn, w, metric="l2", interpret=True)
+    s_r, q_r = ref.build_g_ref(x, y, dn, w, "l2")
+    err = float(jnp.max(jnp.abs(s_p - s_r)))
+    emit("kernel_build_g_maxerr", 0.0, f"{err:.2e}")
+    assert err < 5e-2
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Fig. 1a: clustering loss relative to PAM.
+
+BanditPAM must sit at ratio 1.0 (same medoids as PAM); CLARANS and
+Voronoi Iteration are the quality-sacrificing baselines; CLARA included
+for completeness."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import BanditPAM, clara, clarans, pam, voronoi_iteration
+from repro.core import datasets
+
+from .common import FULL, emit, timed
+
+
+def run():
+    sizes = [500, 1000, 2000, 3000] if FULL else [300, 600]
+    reps = 5 if FULL else 2
+    k = 5
+    rows = {}
+    for n in sizes:
+        ratios = {"banditpam": [], "clarans": [], "voronoi": [], "clara": []}
+        for rep in range(reps):
+            data = datasets.mnist_like(n, seed=100 + rep)
+            p, tp = timed(pam, data, k, "l2")
+            b, tb = timed(lambda: BanditPAM(k, "l2", seed=rep,
+                                            baseline="leader").fit(data))
+            c = clarans(data, k, "l2", seed=rep, max_neighbors=150)
+            v = voronoi_iteration(data, k, "l2", seed=rep)
+            cl = clara(data, k, "l2", seed=rep)
+            ratios["banditpam"].append(b.loss / p.loss)
+            ratios["clarans"].append(c.loss / p.loss)
+            ratios["voronoi"].append(v.loss / p.loss)
+            ratios["clara"].append(cl.loss / p.loss)
+        rows[n] = {a: float(np.mean(r)) for a, r in ratios.items()}
+        emit(f"fig1a_loss_ratio_n{n}", tb * 1e6 / max(1, n),
+             ";".join(f"{a}={v:.4f}" for a, v in rows[n].items()))
+    # invariant from the paper: BanditPAM == PAM, others >= 1
+    worst = max(v["banditpam"] for v in rows.values())
+    emit("fig1a_banditpam_worst_ratio", 0.0, f"{worst:.6f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,121 @@
+"""Roofline analysis (deliverable g): three-term model per (arch x shape)
+from the dry-run's compiled artifacts.
+
+Terms (v5e, per chip): t_compute = FLOPs/197e12, t_memory = bytes/819e9,
+t_collective = collective_bytes/50e9.  FLOPs/bytes are the loop-corrected
+per-device totals (see repro.launch.dryrun docstring); collective bytes are
+summed HLO collective result sizes (a consistent upper bound on per-chip
+wire traffic).  MODEL_FLOPS = 6*N_active*D (x1 for inference cells; train
+cells include the 3x backward+update factor in the 6ND convention).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+CHIPS = 256              # single-pod roofline table
+
+TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+          "decode_32k": 128, "long_500k": 1}
+
+
+def load(path: str = "results/dryrun.json") -> List[dict]:
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    # keep last record per cell
+    dedup = {}
+    for r in rows:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def terms(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    c = rec.get("corrected") or {
+        "flops": rec["flops"], "bytes_accessed": rec["bytes_accessed"],
+        "collective_bytes": rec["collective_bytes"]}
+    flops = c["flops"]
+    byts = c["bytes_accessed"]
+    coll = sum(c["collective_bytes"].values())
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    # MODEL_FLOPS: 6ND for train (fwd+bwd), 2ND for inference cells
+    mf_per_tok = (6.0 if rec["shape"] == "train_4k" else 2.0) * rec["params_active"]
+    model_flops = mf_per_tok * TOKENS[rec["shape"]]
+    ratio = model_flops / max(flops * CHIPS, 1.0)
+    bound = max(t_c, t_m, t_x)
+    frac = t_c / bound if bound > 0 else 0.0
+    return {"t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+            "dominant": dom, "model_flops": model_flops,
+            "useful_ratio": ratio, "roofline_fraction": frac}
+
+
+_SUGGEST = {
+    "compute": "reduce recompute (remat policy) / pad-free einsums to raise "
+               "useful-FLOP ratio",
+    "memory": "fuse/chunk the dominant producer so activations stay on-chip; "
+              "raise arithmetic intensity (larger per-step tiles)",
+    "collective": "reshard to cut the biggest collective (defer grad "
+                  "all-reduce out of the microbatch loop / move EP a2a "
+                  "inside pod)",
+}
+
+
+def table(rows: List[dict], mesh: str = "16x16") -> str:
+    out = ["| arch | shape | t_comp(s) | t_mem(s) | t_coll(s) | dominant | "
+           "6ND/HLO | next lever |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"].startswith("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status']} | — | — |")
+            continue
+        t = terms(r)
+        if t is None:
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['t_compute']:.3e} | "
+            f"{t['t_memory']:.3e} | {t['t_collective']:.3e} | "
+            f"{t['dominant']} | {t['useful_ratio']:.2f} | "
+            f"{_SUGGEST[t['dominant']]} |")
+    return "\n".join(out)
+
+
+def run():
+    from .common import emit
+    rows = load()
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"].startswith("skipped") for r in rows)
+    emit("roofline_cells", 0.0, f"ok={n_ok};skipped={n_skip};total={len(rows)}")
+    for r in rows:
+        t = terms(r)
+        if t is None:
+            continue
+        emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
+             f"dom={t['dominant']};t_c={t['t_compute']:.3e};"
+             f"t_m={t['t_memory']:.3e};t_x={t['t_collective']:.3e};"
+             f"useful={t['useful_ratio']:.2f}")
+    print(table(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

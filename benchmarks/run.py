@@ -1,0 +1,28 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.  Set REPRO_BENCH_FULL=1 for the
+paper-scale grids (default: CPU-quick grids)."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (kernels_bench, loss_quality, roofline, scaling_n,
+                   sigma_adaptivity, violation_pca)
+    print("name,us_per_call,derived")
+    failed = []
+    for mod in (loss_quality, scaling_n, sigma_adaptivity, violation_pca,
+                kernels_bench, roofline):
+        try:
+            mod.run()
+        except Exception:
+            failed.append(mod.__name__)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

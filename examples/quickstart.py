@@ -1,0 +1,39 @@
+"""Quickstart: BanditPAM vs exact PAM on a synthetic MNIST-like set.
+
+    PYTHONPATH=src python examples/quickstart.py [--n 2000] [--k 5]
+"""
+import argparse
+import time
+
+from repro.core import BanditPAM, datasets, pam
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2000)
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--metric", default="l2",
+                    choices=["l2", "l2sq", "l1", "cosine"])
+    args = ap.parse_args()
+
+    data = datasets.mnist_like(args.n, seed=0)
+    print(f"data: {data.shape}, metric={args.metric}, k={args.k}")
+
+    t0 = time.time()
+    p = pam(data, args.k, metric=args.metric)
+    t_pam = time.time() - t0
+    print(f"PAM        medoids={sorted(p.medoids.tolist())} "
+          f"loss={p.loss:.2f} dist_evals={p.distance_evals:,} ({t_pam:.1f}s)")
+
+    t0 = time.time()
+    b = BanditPAM(args.k, metric=args.metric, seed=0, baseline="leader").fit(data)
+    t_bp = time.time() - t0
+    print(f"BanditPAM  medoids={sorted(b.medoids.tolist())} "
+          f"loss={b.loss:.2f} dist_evals={b.distance_evals:,} ({t_bp:.1f}s)")
+    print(f"same medoids as PAM: {sorted(p.medoids) == sorted(b.medoids)}")
+    print(f"distance-evaluation reduction: "
+          f"{p.distance_evals / max(b.distance_evals, 1):.1f}x")
+
+
+if __name__ == "__main__":
+    main()

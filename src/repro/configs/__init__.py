@@ -1,0 +1,2 @@
+from .base import (ARCH_IDS, SHAPES, ArchConfig, ShapeConfig, cells,
+                   get_config, get_reduced, supports_long_context)

@@ -1,0 +1,15 @@
+# repro.core — the paper's contribution: BanditPAM k-medoids via
+# multi-armed bandits, plus the exact PAM oracles and quality baselines.
+from .adaptive import SearchResult, adaptive_search
+from .banditpam import BanditPAM, FitResult, medoid_cache, total_loss
+from .distances import available_metrics, get_metric, pairwise, register_metric
+from .pam import PAMResult, pam
+from .baselines import clara, clarans, voronoi_iteration
+from . import datasets
+
+__all__ = [
+    "SearchResult", "adaptive_search", "BanditPAM", "FitResult",
+    "medoid_cache", "total_loss", "available_metrics", "get_metric",
+    "pairwise", "register_metric", "PAMResult", "pam", "clara", "clarans",
+    "voronoi_iteration", "datasets",
+]

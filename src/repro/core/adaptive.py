@@ -1,0 +1,265 @@
+"""Algorithm 1 of the paper: Adaptive-Search(S_tar, S_ref, g, B, delta, sigma).
+
+A batched UCB / successive-elimination best-arm routine, recast for TPU:
+
+* The arm set is *static* — eliminated arms are masked, not removed, so the
+  whole search is a single ``lax.while_loop`` with fixed shapes (hardware
+  adaptation #1 in DESIGN.md).  The *algorithmic* number of distance
+  evaluations (what the paper counts and what real hardware pays with the
+  compacted execution) is tracked exactly via ``count_fn``.
+* Arm statistics are streamed: ``stats_fn`` returns per-arm batch *sums*,
+  *square-sums* and *leader cross-sums*, never materialising an
+  ``[arms, B]`` tensor in HBM.  This is what allows the SWAP step to use the
+  FastPAM1 rewrite (one distance per ``(x, y)`` shared across all k
+  medoid-arms) as a single matmul.
+
+Two sampling modes:
+
+* ``"replacement"`` — the paper's §3.2 literal procedure: i.i.d. uniform
+  batches; if the budget (``n_used ≥ |S_ref|``) is exhausted with >1
+  surviving arm, survivors are resolved exactly (Algorithm 1 lines 13–15).
+* ``"permutation"`` (default) — the paper's own Appendix 2.2 refinement:
+  batches are consecutive slices of a fixed random permutation of S_ref
+  (sampling without replacement).  The confidence interval gains a
+  finite-population factor ``sqrt(1 − n_used/n_ref)`` (Serfling/Hoeffding
+  for simple random sampling), so at full budget the running mean *is* the
+  exact mean and CI = 0 — survivors resolve without the separate exact
+  pass.  Theorem 2's proof does not require cross-round independence of the
+  reference sampling, so correctness guarantees carry over.
+
+Beyond-paper optimization (``baseline="leader"``): every arm is evaluated on
+the *same* reference batch, so for any two arms the difference estimator
+``μ̂_x − μ̂_lead`` has variance ``Var(g_x(J) − g_lead(J))`` — typically far
+smaller than ``σ_x² + σ_lead²`` for the near-optimal arms that dominate the
+paper's cost bound (their g-returns are strongly positively correlated).
+After a pilot round picks a leader, we additionally track differenced
+statistics ``D_x = g_x − g_lead`` and eliminate on *either* the raw CI rule
+(paper) or the differenced CI rule.  Both are valid 1−δ confidence
+sequences for quantities whose argmin is the same arm, so the union-bound
+correctness argument of Theorem 1 carries through (with 2δ in place of δ).
+Final selection still uses the raw running means (exact at full budget in
+permutation mode), so the returned arm matches PAM's argmin exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Per-arm sub-Gaussianity floor: keeps CIs finite for degenerate arms whose
+# first-batch returns are constant (e.g. duplicated points).
+SIGMA_FLOOR = 1e-8
+
+
+class SearchResult(NamedTuple):
+    best: jnp.ndarray        # int32 index into the (flattened) arm set
+    mu_best: jnp.ndarray     # estimated/exact objective of the winner
+    n_evals: jnp.ndarray     # uint32: algorithmic distance evaluations
+    rounds: jnp.ndarray      # int32: bandit rounds executed
+    used_exact: jnp.ndarray  # bool: fell through to exact computation
+    n_survivors: jnp.ndarray # int32: surviving arms at loop exit
+
+
+class _State(NamedTuple):
+    key: jax.Array
+    sums: jnp.ndarray        # [arms] Σ g (from round 1)
+    sigma: jnp.ndarray       # [arms] per-arm sub-Gaussian scale (Eq. 11)
+    active: jnp.ndarray      # [arms] bool survivor mask
+    n_used: jnp.ndarray      # int32 reference points consumed so far
+    lead: jnp.ndarray        # int32 pilot-round leader (-1 before pilot)
+    d_sums: jnp.ndarray      # [arms] Σ (g_x - g_lead) post-pilot
+    d_sq: jnp.ndarray        # [arms] Σ (g_x - g_lead)² post-pilot
+    sigma_d: jnp.ndarray     # [arms] differenced sub-Gaussian scale
+    n_post: jnp.ndarray      # int32 post-pilot samples
+    n_evals: jnp.ndarray     # uint32 distance evaluations
+    rounds: jnp.ndarray
+
+
+StatsFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+                   Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]
+ExactFn = Callable[[], jnp.ndarray]
+CountFn = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def _default_count(active: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(active.astype(jnp.uint32))
+
+
+def adaptive_search(
+    key: jax.Array,
+    *,
+    stats_fn: StatsFn,
+    exact_fn: ExactFn,
+    n_arms: int,
+    n_ref: int,
+    batch_size: int = 100,
+    delta: Optional[float] = None,
+    active_init: Optional[jnp.ndarray] = None,
+    count_fn: Optional[CountFn] = None,
+    sampling: str = "permutation",
+    baseline: str = "none",
+    stop_when_positive: bool = False,
+    perm: Optional[jnp.ndarray] = None,
+    free_rounds: int = 0,
+) -> SearchResult:
+    """Run one best-arm identification (one BUILD assignment or one SWAP pick).
+
+    Args:
+      stats_fn: ``(ref_idx[B], w[B], lead, rnd) -> (sums, sqsums, cross)``
+        — per-arm weighted batch sums of ``g``, ``g²`` and ``g·g_lead``
+        over the sampled reference points (weights are the {0,1} padding
+        mask; ``lead`` is an arm index, only meaningful when ≥ 0; ``rnd``
+        is the round index, letting the caller serve cached distance
+        columns for warm rounds).
+      perm / free_rounds: paper App 2.2 cache — reuse a FIXED reference
+        permutation across calls; the first ``free_rounds`` rounds hit the
+        caller's distance cache and cost zero *new* evaluations.
+      exact_fn: ``() -> mu[n_arms]`` exact objective; only used by the
+        ``"replacement"`` fallback.
+      count_fn: distance evaluations *per reference point* as a function of
+        the survivor mask (BUILD: #active arms; SWAP: #distinct active
+        non-medoids, since FastPAM1 shares distances across the k medoids).
+    """
+    if sampling not in ("permutation", "replacement"):
+        raise ValueError(f"unknown sampling mode {sampling!r}")
+    if baseline not in ("none", "leader"):
+        raise ValueError(f"unknown baseline mode {baseline!r}")
+    if delta is None:
+        delta = 1.0 / (1000.0 * n_arms)
+    if count_fn is None:
+        count_fn = _default_count
+    log_term = jnp.float32(jnp.log(1.0 / delta))
+    B = int(batch_size)
+    use_perm = sampling == "permutation"
+    use_lead = baseline == "leader"
+
+    active0 = jnp.ones((n_arms,), jnp.bool_) if active_init is None else active_init
+
+    n_rounds_max = -(-n_ref // B)
+    if use_perm:
+        if perm is None:
+            key, pkey = jax.random.split(key)
+            perm = jax.random.permutation(pkey, n_ref).astype(jnp.int32)
+        total = n_rounds_max * B
+        reps = -(-total // n_ref)
+        perm_idx = jnp.tile(perm, reps)[:total]
+        perm_w = (jnp.arange(total) < n_ref).astype(jnp.float32)
+
+    def cond(s: _State) -> jnp.ndarray:
+        go = jnp.logical_and(s.n_used < n_ref,
+                             jnp.sum(s.active.astype(jnp.int32)) > 1)
+        if stop_when_positive:
+            # SWAP-convergence shortcut (beyond-paper, EXPERIMENTS §Perf):
+            # the driver only *uses* the winner if its mean is negative
+            # (a loss-improving swap).  Once every surviving arm's LCB is
+            # positive, no arm can be an improving swap w.p. ≥ 1−δ, so
+            # identifying the argmin among them is wasted sampling.
+            n_used_f = jnp.maximum(s.n_used.astype(jnp.float32), 1.0)
+            mu = s.sums / n_used_f
+            ci = s.sigma * jnp.sqrt(log_term / n_used_f)
+            lcb_min = jnp.min(jnp.where(s.active, mu - ci, jnp.inf))
+            go = jnp.logical_and(go, lcb_min <= 0.0)
+        return go
+
+    def body(s: _State) -> _State:
+        if use_perm:
+            start = s.rounds * B
+            ref_idx = jax.lax.dynamic_slice(perm_idx, (start,), (B,))
+            w = jax.lax.dynamic_slice(perm_w, (start,), (B,))
+            key = s.key
+        else:
+            key, sub = jax.random.split(s.key)
+            ref_idx = jax.random.randint(sub, (B,), 0, n_ref)
+            w = jnp.ones((B,), jnp.float32)
+        b_eff = jnp.sum(w).astype(jnp.int32)
+        b_eff_f = b_eff.astype(jnp.float32)
+        sums_b, sq_b, cross_b = stats_fn(ref_idx, w, jnp.maximum(s.lead, 0),
+                                         s.rounds)
+
+        # ---- raw statistics (paper) ----
+        sums = s.sums + sums_b
+        n_new = s.n_used + b_eff
+        n_new_f = n_new.astype(jnp.float32)
+        mu_hat = sums / n_new_f
+        batch_mean = sums_b / b_eff_f
+        batch_var = jnp.maximum(sq_b / b_eff_f - batch_mean * batch_mean, 0.0)
+        sigma = jnp.where(s.n_used == 0,                      # Eq. 11
+                          jnp.sqrt(batch_var) + SIGMA_FLOOR, s.sigma)
+        fpc = (jnp.sqrt(jnp.maximum(1.0 - n_new_f / n_ref, 0.0))
+               if use_perm else jnp.float32(1.0))
+        ci = sigma * jnp.sqrt(log_term / n_new_f) * fpc
+        ucb = jnp.where(s.active, mu_hat + ci, jnp.inf)
+        lcb = mu_hat - ci
+        kill_raw = lcb > jnp.min(ucb)
+
+        # ---- differenced statistics vs the pilot leader (beyond-paper) ----
+        if use_lead:
+            have_lead = s.lead >= 0
+            d_b = sums_b - sums_b[jnp.maximum(s.lead, 0)]
+            dsq_b = sq_b - 2.0 * cross_b + sq_b[jnp.maximum(s.lead, 0)]
+            d_sums = s.d_sums + jnp.where(have_lead, d_b, 0.0)
+            d_sq = s.d_sq + jnp.where(have_lead, dsq_b, 0.0)
+            n_post = s.n_post + jnp.where(have_lead, b_eff, 0)
+            n_post_f = jnp.maximum(n_post.astype(jnp.float32), 1.0)
+            first_d = jnp.logical_and(have_lead, s.n_post == 0)
+            dvar = jnp.maximum(dsq_b / b_eff_f - (d_b / b_eff_f) ** 2, 0.0)
+            sigma_d = jnp.where(first_d, jnp.sqrt(dvar) + SIGMA_FLOOR, s.sigma_d)
+            mu_d = d_sums / n_post_f
+            ci_d = sigma_d * jnp.sqrt(log_term / n_post_f)
+            ucb_d = jnp.where(s.active, mu_d + ci_d, jnp.inf)
+            kill_d = jnp.logical_and(n_post > 0, (mu_d - ci_d) > jnp.min(ucb_d))
+            kill = jnp.logical_or(kill_raw, kill_d)
+            # pilot leader: fixed after the first round
+            lead = jnp.where(s.lead >= 0, s.lead,
+                             jnp.argmin(jnp.where(s.active, mu_hat, jnp.inf)
+                                        ).astype(jnp.int32))
+        else:
+            kill = kill_raw
+            lead = s.lead
+            d_sums, d_sq, sigma_d, n_post = s.d_sums, s.d_sq, s.sigma_d, s.n_post
+
+        active = jnp.logical_and(s.active, jnp.logical_not(kill))
+        fresh = (s.rounds >= free_rounds).astype(jnp.uint32)
+        n_evals = s.n_evals + fresh * count_fn(s.active) * b_eff.astype(jnp.uint32)
+        return _State(key, sums, sigma, active, n_new, lead,
+                      d_sums, d_sq, sigma_d, n_post, n_evals, s.rounds + 1)
+
+    zeros = jnp.zeros((n_arms,), jnp.float32)
+    init = _State(
+        key=key, sums=zeros,
+        sigma=jnp.full((n_arms,), jnp.inf, jnp.float32),
+        active=active0, n_used=jnp.int32(0), lead=jnp.int32(-1),
+        d_sums=zeros, d_sq=zeros,
+        sigma_d=jnp.full((n_arms,), jnp.inf, jnp.float32),
+        n_post=jnp.int32(0), n_evals=jnp.uint32(0), rounds=jnp.int32(0),
+    )
+    final = jax.lax.while_loop(cond, body, init)
+
+    n_survivors = jnp.sum(final.active.astype(jnp.int32))
+    mu_final = final.sums / jnp.maximum(final.n_used.astype(jnp.float32), 1.0)
+
+    def exact_branch(_):
+        mu_exact = exact_fn()
+        mu_sel = jnp.where(final.active, mu_exact, jnp.inf)
+        best = jnp.argmin(mu_sel).astype(jnp.int32)
+        extra = count_fn(final.active) * jnp.uint32(n_ref)
+        return best, mu_sel[best], final.n_evals + extra, jnp.bool_(True)
+
+    def sampled_branch(_):
+        # In permutation mode a full budget means mu_hat is the exact mean,
+        # so ties are resolved by lowest index — identical to PAM's argmin.
+        mu_sel = jnp.where(final.active, mu_final, jnp.inf)
+        best = jnp.argmin(mu_sel).astype(jnp.int32)
+        return best, mu_sel[best], final.n_evals, jnp.bool_(False)
+
+    if use_perm:
+        best, mu_best, n_evals, used_exact = sampled_branch(None)
+    else:
+        best, mu_best, n_evals, used_exact = jax.lax.cond(
+            n_survivors > 1, exact_branch, sampled_branch, operand=None)
+
+    return SearchResult(best=best, mu_best=mu_best, n_evals=n_evals,
+                        rounds=final.rounds, used_exact=used_exact,
+                        n_survivors=n_survivors)

@@ -1,0 +1,364 @@
+"""BanditPAM: the paper's algorithm — BUILD + SWAP driven by Algorithm 1.
+
+Faithful to the paper:
+
+* BUILD (Eq. 6): arms = candidate points, ``g_x(y) = (d(x,y) − d_near(y)) ∧ 0``
+  against the cached nearest-medoid distance; the first assignment uses
+  ``g_x(y) = d(x,y)`` (Eq. 4 with an empty medoid set).
+* SWAP (Eq. 7 + Appendix Eq. 12 / FastPAM1): arms = (medoid m, candidate x)
+  pairs.  One distance ``d(x,y)`` serves all k arms ``(·, x)`` via the cached
+  ``d₁, d₂`` and cluster assignment — evaluated here as a base term plus a
+  one-hot matmul correction, which never materialises a ``[k, n, B]`` tensor:
+
+      g_{m,x}(y) = −d₁(y) + 1[y∉C_m]·min(d₁(y), d(x,y))
+                           + 1[y∈C_m]·min(d₂(y), d(x,y))
+                 = base_x(y) + 1[y∈C_m]·corr_x(y)
+      base_x(y) = min(d₁(y), d(x,y)) − d₁(y)
+      corr_x(y) = min(d₂(y), d(x,y)) − min(d₁(y), d(x,y))
+
+* σ_x re-estimated from the first batch of every Algorithm 1 call (Eq. 11,
+  Appendix 1.2), B = 100, δ = 1/(1000·|S_tar|) by default (§3.2).
+* SWAP iterations repeat until the chosen swap no longer improves the exact
+  loss, with a hard cap T (paper §4 Remark 1).
+
+Distance-evaluation accounting (the paper's headline metric) is algorithmic:
+each bandit round pays ``#active-arms × B`` in BUILD and
+``#distinct-active-candidates × B`` in SWAP (FastPAM1 sharing), cache
+(re)computation pays ``n·k``, and the d_near update after each BUILD
+assignment pays ``n`` — exactly the ledger of the reference implementation.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .adaptive import SearchResult, adaptive_search
+from .distances import get_metric
+
+_EXACT_CHUNK = 512  # reference-chunk size for exact fallback passes
+
+
+# ---------------------------------------------------------------------------
+# Shared cache / loss helpers
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def medoid_cache(data: jnp.ndarray, medoids: jnp.ndarray, *, metric: str
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """d1 (nearest-medoid dist), d2 (second nearest), assignment; [n] each."""
+    dmat = get_metric(metric)(data, data[medoids])          # [n, k]
+    assign = jnp.argmin(dmat, axis=1).astype(jnp.int32)
+    d1 = jnp.min(dmat, axis=1)
+    dmat2 = dmat.at[jnp.arange(dmat.shape[0]), assign].set(jnp.inf)
+    d2 = jnp.min(dmat2, axis=1)
+    return d1, d2, assign
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def total_loss(data: jnp.ndarray, medoids: jnp.ndarray, *, metric: str) -> jnp.ndarray:
+    dmat = get_metric(metric)(data, data[medoids])
+    return jnp.sum(jnp.min(dmat, axis=1))
+
+
+def _ref_chunks(n_ref: int, chunk: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Static index/weight tiling of [0, n_ref) into equal chunks."""
+    n_chunks = -(-n_ref // chunk)
+    idx = np.arange(n_chunks * chunk)
+    w = (idx < n_ref).astype(np.float32)
+    idx = np.minimum(idx, n_ref - 1)
+    return idx.reshape(n_chunks, chunk), w.reshape(n_chunks, chunk)
+
+
+# ---------------------------------------------------------------------------
+# BUILD
+# ---------------------------------------------------------------------------
+
+def _build_g(dxy: jnp.ndarray, dnear_b: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 6 with the Eq. 4 special-case for the first assignment."""
+    dn = dnear_b[None, :]
+    return jnp.where(jnp.isinf(dn), dxy, jnp.minimum(dxy - dn, 0.0))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "batch_size", "delta", "sampling",
+                                    "baseline", "free_rounds"))
+def _build_search(data: jnp.ndarray, dnear: jnp.ndarray, med_mask: jnp.ndarray,
+                  key: jax.Array, *, metric: str, batch_size: int,
+                  delta: float, sampling: str = "permutation",
+                  baseline: str = "none", perm=None, dwarm=None,
+                  free_rounds: int = 0) -> SearchResult:
+    n = data.shape[0]
+    dist = get_metric(metric)
+
+    def stats_fn(ref_idx, w, lead, rnd):
+        if dwarm is None:
+            dxy = dist(data, data[ref_idx])
+        else:
+            # paper App 2.2 cache: warm rounds read precomputed distance
+            # columns (same fixed permutation across every search call)
+            dxy = jax.lax.cond(
+                rnd < free_rounds,
+                lambda _: jax.lax.dynamic_slice_in_dim(
+                    dwarm, rnd * batch_size, batch_size, 1),
+                lambda _: dist(data, data[ref_idx]), None)
+        g = _build_g(dxy, dnear[ref_idx]) * w[None, :]             # [n, B]
+        cross = g @ g[lead]
+        return jnp.sum(g, axis=1), jnp.sum(g * g, axis=1), cross
+
+    def exact_fn():
+        idx_np, w_np = _ref_chunks(n, _EXACT_CHUNK)
+        idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
+
+        def body(acc, iw):
+            i, wc = iw
+            g = _build_g(dist(data, data[i]), dnear[i])
+            return acc + jnp.sum(g * wc[None, :], axis=1), None
+
+        sums, _ = jax.lax.scan(body, jnp.zeros((n,), jnp.float32), (idx, w))
+        return sums / n
+
+    return adaptive_search(key, stats_fn=stats_fn, exact_fn=exact_fn,
+                           n_arms=n, n_ref=n, batch_size=batch_size,
+                           delta=delta, active_init=jnp.logical_not(med_mask),
+                           sampling=sampling, baseline=baseline, perm=perm,
+                           free_rounds=free_rounds)
+
+
+# ---------------------------------------------------------------------------
+# SWAP (FastPAM1 fused form)
+# ---------------------------------------------------------------------------
+
+def _swap_terms(dxy: jnp.ndarray, d1_b: jnp.ndarray, d2_b: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    base = jnp.minimum(dxy, d1_b[None, :]) - d1_b[None, :]
+    corr = jnp.minimum(dxy, d2_b[None, :]) - jnp.minimum(dxy, d1_b[None, :])
+    return base, corr
+
+
+def _swap_batch_stats(dxy, d1_b, d2_b, a_b, w, k, lead=None):
+    """Per-arm (m·n + x) sums, square-sums (and optional leader cross-sums)
+    over a reference batch.
+
+    g = base + 1[assign==m]·corr  ⇒
+      Σ g        = Σ base + Σ_{y∈C_m} corr
+      Σ g²       = Σ base² + Σ_{y∈C_m} (2·base·corr + corr²)
+      Σ g·g_lead = Σ base·g_lead + Σ_{y∈C_m} corr·g_lead
+    The C_m-restricted sums are one-hot matmuls (MXU-shaped).
+    """
+    n = dxy.shape[0]
+    base, corr = _swap_terms(dxy, d1_b, d2_b)
+    # weights are {0,1} (padding mask), so w² = w and masking base once is
+    # enough for every product below.
+    base = base * w[None, :]
+    onehot = jax.nn.one_hot(a_b, k, dtype=dxy.dtype) * w[:, None]   # [B, k]
+    sums = jnp.sum(base, axis=1)[None, :] + (corr @ onehot).T       # [k, n]
+    sq_base = jnp.sum(base * base, axis=1)
+    sq_cross = 2.0 * base * corr + corr * corr
+    sqsums = sq_base[None, :] + (sq_cross @ onehot).T
+    if lead is None:
+        return sums.reshape(-1), sqsums.reshape(-1)
+    m_l, x_l = lead // n, lead % n
+    g_lead = base[x_l] + onehot[:, m_l] * corr[x_l]                 # [B], w-masked
+    cross = (base @ g_lead)[None, :] + ((corr * g_lead[None, :]) @ onehot).T
+    return sums.reshape(-1), sqsums.reshape(-1), cross.reshape(-1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "batch_size", "delta", "k",
+                                    "sampling", "baseline", "early_stop",
+                                    "free_rounds"))
+def _swap_search(data: jnp.ndarray, d1: jnp.ndarray, d2: jnp.ndarray,
+                 assign: jnp.ndarray, med_mask: jnp.ndarray, key: jax.Array,
+                 *, metric: str, batch_size: int, delta: float, k: int,
+                 sampling: str = "permutation", baseline: str = "none",
+                 early_stop: bool = False, perm=None, dwarm=None,
+                 free_rounds: int = 0) -> SearchResult:
+    n = data.shape[0]
+    dist = get_metric(metric)
+
+    def stats_fn(ref_idx, w, lead, rnd):
+        if dwarm is None:
+            dxy = dist(data, data[ref_idx])                  # [n, B]
+        else:
+            dxy = jax.lax.cond(
+                rnd < free_rounds,
+                lambda _: jax.lax.dynamic_slice_in_dim(
+                    dwarm, rnd * batch_size, batch_size, 1),
+                lambda _: dist(data, data[ref_idx]), None)
+        return _swap_batch_stats(dxy, d1[ref_idx], d2[ref_idx],
+                                 assign[ref_idx], w, k, lead=lead)
+
+    def exact_fn():
+        idx_np, w_np = _ref_chunks(n, _EXACT_CHUNK)
+        idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
+
+        def body(acc, iw):
+            i, wc = iw
+            dxy = dist(data, data[i])
+            s, _ = _swap_batch_stats(dxy, d1[i], d2[i], assign[i], wc, k)
+            return acc + s, None
+
+        sums, _ = jax.lax.scan(body, jnp.zeros((k * n,), jnp.float32), (idx, w))
+        return sums / n
+
+    # Candidates that are already medoids are not valid swap targets.
+    active0 = jnp.tile(jnp.logical_not(med_mask)[None, :], (k, 1)).reshape(-1)
+
+    def count_fn(active):
+        # FastPAM1: one distance per (x, y) pair serves all k arms (·, x).
+        any_x = jnp.any(active.reshape(k, n), axis=0)
+        return jnp.sum(any_x.astype(jnp.uint32))
+
+    return adaptive_search(key, stats_fn=stats_fn, exact_fn=exact_fn,
+                           n_arms=k * n, n_ref=n, batch_size=batch_size,
+                           delta=delta, active_init=active0, count_fn=count_fn,
+                           sampling=sampling, baseline=baseline,
+                           stop_when_positive=early_stop, perm=perm,
+                           free_rounds=free_rounds)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FitResult:
+    medoids: np.ndarray
+    loss: float
+    n_swaps: int
+    converged: bool
+    distance_evals: int
+    evals_by_phase: Dict[str, int] = field(default_factory=dict)
+    swap_history: List[Tuple[int, int, float]] = field(default_factory=list)
+    build_rounds: List[int] = field(default_factory=list)
+    swap_exact_fallbacks: int = 0
+
+
+class BanditPAM:
+    """k-medoids via adaptive sampling; same medoids as PAM w.h.p."""
+
+    def __init__(self, k: int, metric: str = "l2", batch_size: int = 100,
+                 delta: Optional[float] = None, max_swaps: Optional[int] = None,
+                 seed: int = 0, sampling: str = "permutation",
+                 baseline: str = "none", swap_early_stop: bool = False,
+                 cache_cols: int = 0):
+        self.k = int(k)
+        self.metric = metric
+        self.batch_size = int(batch_size)
+        self.delta = delta
+        self.max_swaps = max_swaps if max_swaps is not None else 4 * self.k + 10
+        self.seed = seed
+        self.sampling = sampling
+        self.baseline = baseline
+        self.swap_early_stop = swap_early_stop
+        self.cache_cols = cache_cols
+
+    # -- BUILD ----------------------------------------------------------
+    def _make_cache(self, data: jnp.ndarray, key: jax.Array, res: FitResult):
+        """Paper App 2.2: one fixed reference permutation for every search
+        + a warm block of its first C distance columns, paid once."""
+        n = data.shape[0]
+        if self.cache_cols <= 0 or self.sampling != "permutation":
+            return None, None, 0
+        c = (min(self.cache_cols, n) // self.batch_size) * self.batch_size
+        if c <= 0:
+            return None, None, 0
+        perm = jax.random.permutation(key, n).astype(jnp.int32)
+        dwarm = get_metric(self.metric)(data, data[perm[:c]])
+        res.evals_by_phase["cache_warm"] = n * c
+        return perm, dwarm, c // self.batch_size
+
+    def _build(self, data: jnp.ndarray, key: jax.Array, res: FitResult):
+        n = data.shape[0]
+        dist = get_metric(self.metric)
+        delta = self.delta if self.delta is not None else 1.0 / (1000.0 * n)
+        dnear = jnp.full((n,), jnp.inf, jnp.float32)
+        med_mask = jnp.zeros((n,), jnp.bool_)
+        medoids: List[int] = []
+        build_evals = 0
+        for _ in range(self.k):
+            key, sub = jax.random.split(key)
+            sr = _build_search(data, dnear, med_mask, sub, metric=self.metric,
+                               batch_size=self.batch_size, delta=delta,
+                               sampling=self.sampling, baseline=self.baseline,
+                               perm=self._perm, dwarm=self._dwarm,
+                               free_rounds=self._free_rounds)
+            m = int(sr.best)
+            medoids.append(m)
+            med_mask = med_mask.at[m].set(True)
+            drow = dist(data[m][None, :], data)[0]
+            dnear = jnp.minimum(dnear, drow)
+            build_evals += int(sr.n_evals) + n
+            res.build_rounds.append(int(sr.rounds))
+        res.evals_by_phase["build"] = build_evals
+        return jnp.asarray(medoids, jnp.int32), med_mask, key
+
+    # -- SWAP -----------------------------------------------------------
+    def _swap(self, data: jnp.ndarray, medoids: jnp.ndarray,
+              med_mask: jnp.ndarray, key: jax.Array, res: FitResult):
+        n = data.shape[0]
+        delta = self.delta if self.delta is not None else 1.0 / (1000.0 * self.k * n)
+        swap_evals = 0
+        loss = float(total_loss(data, medoids, metric=self.metric))
+        converged = False
+        for _ in range(self.max_swaps):
+            d1, d2, assign = medoid_cache(data, medoids, metric=self.metric)
+            swap_evals += n * self.k
+            key, sub = jax.random.split(key)
+            sr = _swap_search(data, d1, d2, assign, med_mask, sub,
+                              metric=self.metric, batch_size=self.batch_size,
+                              delta=delta, k=self.k, sampling=self.sampling,
+                              baseline=self.baseline,
+                              early_stop=self.swap_early_stop,
+                              perm=self._perm, dwarm=self._dwarm,
+                              free_rounds=self._free_rounds)
+            swap_evals += int(sr.n_evals)
+            res.swap_exact_fallbacks += int(sr.used_exact)
+            m_idx, x_idx = divmod(int(sr.best), n)
+            cand = medoids.at[m_idx].set(x_idx)
+            new_loss = float(total_loss(data, cand, metric=self.metric))
+            swap_evals += n * self.k
+            if new_loss < loss - 1e-7 * max(1.0, abs(loss)):
+                old = int(medoids[m_idx])
+                medoids = cand
+                med_mask = med_mask.at[old].set(False).at[x_idx].set(True)
+                res.swap_history.append((old, x_idx, new_loss))
+                loss = new_loss
+            else:
+                converged = True
+                break
+        res.evals_by_phase["swap"] = swap_evals
+        return medoids, loss, converged
+
+    # -- public ----------------------------------------------------------
+    def fit(self, data) -> FitResult:
+        data = jnp.asarray(data, jnp.float32)
+        if data.shape[0] <= self.k:
+            raise ValueError("need n > k")
+        key = jax.random.PRNGKey(self.seed)
+        res = FitResult(medoids=np.zeros(self.k, np.int64), loss=np.inf,
+                        n_swaps=0, converged=False, distance_evals=0)
+        key, ckey = jax.random.split(key)
+        self._perm, self._dwarm, self._free_rounds = self._make_cache(
+            data, ckey, res)
+        medoids, med_mask, key = self._build(data, key, res)
+        medoids, loss, converged = self._swap(data, medoids, med_mask, key, res)
+        res.medoids = np.asarray(medoids)
+        res.loss = loss
+        res.n_swaps = len(res.swap_history)
+        res.converged = converged
+        res.distance_evals = sum(res.evals_by_phase.values())
+        return res
+
+    def fit_predict(self, data) -> Tuple[FitResult, np.ndarray]:
+        res = self.fit(data)
+        data = jnp.asarray(data, jnp.float32)
+        _, _, assign = medoid_cache(data, jnp.asarray(res.medoids),
+                                    metric=self.metric)
+        return res, np.asarray(assign)

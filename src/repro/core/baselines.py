@@ -1,0 +1,128 @@
+"""The paper's comparison baselines (Fig. 1a): CLARANS, Voronoi Iteration,
+CLARA.  These trade clustering quality for speed — the paper uses them to
+show BanditPAM matches PAM's (better) loss.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .banditpam import medoid_cache, total_loss
+from .distances import get_metric
+from .pam import pam
+
+
+@dataclass
+class BaselineResult:
+    medoids: np.ndarray
+    loss: float
+    distance_evals: int
+
+
+# ---------------------------------------------------------------------------
+# Voronoi Iteration (Park & Jun 2009) — k-means-style alternation
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("metric", "k"))
+def _voronoi_update(data, medoids, *, metric: str, k: int):
+    """Reassign points, then recompute each cluster's medoid exactly."""
+    n = data.shape[0]
+    dist = get_metric(metric)
+    dmat = dist(data, data[medoids])                    # [n, k]
+    assign = jnp.argmin(dmat, axis=1)
+
+    # Cost of x as medoid of cluster c: sum over members of d(x, y).
+    # One [n, n] pass, masked per cluster via one-hot matmul.
+    d_all = dist(data, data)                            # [n, n]
+    onehot = jax.nn.one_hot(assign, k, dtype=d_all.dtype)   # [n, k]
+    cost = d_all @ onehot                               # [n, k] Σ_{y∈C_c} d(x,y)
+    member = onehot > 0
+    cost = jnp.where(member, cost, jnp.inf)             # only members eligible
+    new_medoids = jnp.argmin(cost, axis=0).astype(jnp.int32)
+    return new_medoids, assign
+
+
+def voronoi_iteration(data, k: int, metric: str = "l2", max_iters: int = 50,
+                      seed: int = 0) -> BaselineResult:
+    data = jnp.asarray(data, jnp.float32)
+    n = data.shape[0]
+    rng = np.random.default_rng(seed)
+    medoids = jnp.asarray(rng.choice(n, size=k, replace=False).astype(np.int32))
+    evals = 0
+    for _ in range(max_iters):
+        new_medoids, _ = _voronoi_update(data, medoids, metric=metric, k=k)
+        evals += n * n + n * k
+        if bool(jnp.all(new_medoids == medoids)):
+            break
+        medoids = new_medoids
+    loss = float(total_loss(data, medoids, metric=metric))
+    return BaselineResult(np.asarray(medoids), loss, evals)
+
+
+# ---------------------------------------------------------------------------
+# CLARANS (Ng & Han 2002) — randomized swap-graph search
+# ---------------------------------------------------------------------------
+
+def clarans(data, k: int, metric: str = "l2", num_local: int = 2,
+            max_neighbors: Optional[int] = None, seed: int = 0) -> BaselineResult:
+    data = jnp.asarray(data, jnp.float32)
+    n = data.shape[0]
+    if max_neighbors is None:
+        max_neighbors = max(250, int(0.0125 * k * (n - k)))
+    rng = np.random.default_rng(seed)
+    best_loss, best_medoids = np.inf, None
+    evals = 0
+    for _ in range(num_local):
+        medoids = rng.choice(n, size=k, replace=False).astype(np.int32)
+        cur = jnp.asarray(medoids)
+        cur_loss = float(total_loss(data, cur, metric=metric))
+        evals += n * k
+        j = 0
+        while j < max_neighbors:
+            m_idx = int(rng.integers(k))
+            x = int(rng.integers(n))
+            if x in np.asarray(cur):
+                continue
+            cand = cur.at[m_idx].set(x)
+            cand_loss = float(total_loss(data, cand, metric=metric))
+            evals += n * k
+            if cand_loss < cur_loss:
+                cur, cur_loss, j = cand, cand_loss, 0
+            else:
+                j += 1
+        if cur_loss < best_loss:
+            best_loss, best_medoids = cur_loss, np.asarray(cur)
+    return BaselineResult(best_medoids, best_loss, evals)
+
+
+# ---------------------------------------------------------------------------
+# CLARA (Kaufman & Rousseeuw 1990) — PAM on subsamples
+# ---------------------------------------------------------------------------
+
+def clara(data, k: int, metric: str = "l2", n_samples: int = 5,
+          sample_size: Optional[int] = None, seed: int = 0) -> BaselineResult:
+    data_np = np.asarray(data, np.float32)
+    n = data_np.shape[0]
+    if sample_size is None:
+        sample_size = min(n, 40 + 2 * k)
+    rng = np.random.default_rng(seed)
+    data_j = jnp.asarray(data_np)
+    best_loss, best_medoids = np.inf, None
+    evals = 0
+    for _ in range(n_samples):
+        sub_idx = rng.choice(n, size=sample_size, replace=False)
+        sub_res = pam(data_np[sub_idx], k, metric=metric)
+        evals += sub_res.distance_evals
+        medoids_global = sub_idx[sub_res.medoids]
+        loss = float(total_loss(data_j, jnp.asarray(medoids_global.astype(np.int32)),
+                                metric=metric))
+        evals += n * k
+        if loss < best_loss:
+            best_loss, best_medoids = loss, medoids_global
+    return BaselineResult(np.asarray(best_medoids), best_loss, evals)

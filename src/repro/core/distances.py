@@ -1,0 +1,97 @@
+"""Distance registry for k-medoids.
+
+All functions compute *pairwise* dissimilarities between a target block
+``x: [m, d]`` and a reference block ``y: [r, d]`` and return ``[m, r]``.
+
+The k-medoids problem (paper Eq. 1/3) places no requirements on ``d`` —
+it need not be symmetric, positive, or satisfy the triangle inequality —
+so the registry is open: ``register_metric`` accepts any ``[m,d]x[r,d]->[m,r]``
+callable.
+
+The MXU-friendly metrics (``l2``, ``l2sq``, ``cosine``) are expressed as a
+single matmul plus rank-1 corrections so both the jnp path (here) and the
+Pallas path (``repro.kernels``) hit the systolic array.  ``l1`` is
+bandwidth-bound and is evaluated in reference-chunks to bound the
+``[m, chunk, d]`` intermediate.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Metric = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+_REGISTRY: Dict[str, Metric] = {}
+
+# Keep the [m, chunk, d] L1 intermediate under ~2**24 elements.
+_L1_CHUNK_ELEMS = 1 << 24
+
+
+def register_metric(name: str, fn: Metric) -> None:
+    _REGISTRY[name] = fn
+
+
+def get_metric(name: str) -> Metric:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown metric {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available_metrics():
+    return sorted(_REGISTRY)
+
+
+def l2sq(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distance via ||x||^2 + ||y||^2 - 2 x.y (MXU-shaped)."""
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    yy = jnp.sum(y * y, axis=-1)[None, :]
+    xy = x @ y.T
+    return jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+
+
+def l2(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sqrt(l2sq(x, y))
+
+
+def cosine(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Cosine *distance* 1 - cos_sim, safe at zero vectors."""
+    xn = x * jax.lax.rsqrt(jnp.maximum(jnp.sum(x * x, axis=-1, keepdims=True), 1e-30))
+    yn = y * jax.lax.rsqrt(jnp.maximum(jnp.sum(y * y, axis=-1, keepdims=True), 1e-30))
+    return 1.0 - xn @ yn.T
+
+
+def l1(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Manhattan distance, chunked over references to bound memory."""
+    m, d = x.shape
+    r = y.shape[0]
+    chunk = max(1, min(r, _L1_CHUNK_ELEMS // max(1, m * d)))
+    if chunk >= r:
+        return jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+
+    n_chunks = -(-r // chunk)
+    pad = n_chunks * chunk - r
+    y_pad = jnp.pad(y, ((0, pad), (0, 0)))
+    y_chunks = y_pad.reshape(n_chunks, chunk, d)
+
+    def one(yc):
+        return jnp.sum(jnp.abs(x[:, None, :] - yc[None, :, :]), axis=-1)
+
+    out = jax.lax.map(one, y_chunks)            # [n_chunks, m, chunk]
+    out = jnp.moveaxis(out, 0, 1).reshape(m, n_chunks * chunk)
+    return out[:, :r]
+
+
+register_metric("l2", l2)
+register_metric("l2sq", l2sq)
+register_metric("l1", l1)
+register_metric("cosine", cosine)
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def pairwise(x: jnp.ndarray, y: jnp.ndarray, *, metric: str = "l2") -> jnp.ndarray:
+    """Jitted pairwise dissimilarity ``[m, d] x [r, d] -> [m, r]``."""
+    return get_metric(metric)(x, y)

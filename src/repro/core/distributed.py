@@ -1,0 +1,253 @@
+"""Distributed BanditPAM: data-sharded references x replicated/sharded arms.
+
+The multi-device execution of Algorithm 1 (DESIGN.md §2/§3):
+
+* The reference set is sharded over the ``data`` (and ``pod``) mesh axes —
+  each device owns ``n / n_shards`` points.
+* Reference sampling is **stratified**: every round each shard contributes
+  ``B / n_shards`` uniform draws from its local points (equal-size strata
+  ⇒ the estimator of mu_x stays unbiased; DESIGN.md hardware adaptation #4).
+* Each device computes the g-statistics of ALL arms against its local
+  reference draw; a single ``psum`` over the data axes yields the global
+  per-arm batch sums.  Arm elimination runs redundantly on every device
+  (cheap vector math, saves a broadcast).
+* The hierarchical pod axis composes transparently: ``psum`` over
+  ("pod", "data") is the cross-pod reduction.
+
+``MedoidCurator`` is the LM-stack integration: it consumes embedding
+shards (activations or dataset features) that already live sharded across
+the data axis of a training/serving mesh and returns medoid indices +
+assignments for data curation (examples/train_lm_curated.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .adaptive import SearchResult, adaptive_search
+from .banditpam import FitResult, _build_g, _swap_batch_stats, _swap_terms
+from .distances import get_metric
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+class DistributedBanditPAM:
+    """BanditPAM over a sharded reference set.
+
+    data: [n, d] array (host); sharded internally over the mesh's data axes.
+    Semantics match `BanditPAM` (same medoids as PAM w.h.p.); the sampling
+    schedule differs (stratified per shard), so seeds are not comparable
+    with the single-device class.
+    """
+
+    def __init__(self, k: int, mesh: Mesh, metric: str = "l2",
+                 batch_size: int = 128, delta: Optional[float] = None,
+                 max_swaps: Optional[int] = None, seed: int = 0):
+        self.k = int(k)
+        self.mesh = mesh
+        self.metric = metric
+        self.daxes = _data_axes(mesh)
+        self.n_shards = int(np.prod([mesh.shape[a] for a in self.daxes]))
+        if batch_size % self.n_shards:
+            batch_size += self.n_shards - batch_size % self.n_shards
+        self.batch_size = batch_size
+        self.delta = delta
+        self.max_swaps = max_swaps if max_swaps is not None else 4 * self.k + 10
+        self.seed = seed
+
+    # -- sharded stats ----------------------------------------------------
+    def _shard_data(self, data: jnp.ndarray) -> jnp.ndarray:
+        return jax.device_put(
+            data, NamedSharding(self.mesh, P(self.daxes, None)))
+
+    def _build_stats_fn(self, data_sh, dnear, n: int):
+        """stats_fn(ref_idx, w, lead) with shard-local stratified sampling.
+
+        ref_idx here is reinterpreted: the adaptive loop's sampled global
+        indices are ignored; instead each shard draws B/n_shards local
+        rows keyed by the round's first index (deterministic)."""
+        metric = self.metric
+        b_loc = self.batch_size // self.n_shards
+        daxes = self.daxes
+        dist = get_metric(metric)
+        n_loc = n // self.n_shards
+
+        def local(data_l, dnear_l, key, lead):
+            ax = jax.lax.axis_index(daxes[0]) if len(daxes) == 1 else (
+                jax.lax.axis_index(daxes[0]) * self.mesh.shape[daxes[1]]
+                + jax.lax.axis_index(daxes[1]))
+            kk = jax.random.fold_in(key, ax)
+            idx = jax.random.randint(kk, (b_loc,), 0, n_loc)
+            y = data_l[idx]
+            g = _build_g(dist(data_sh, y), dnear_l[idx])    # [n, b_loc]
+            sums = jax.lax.psum(jnp.sum(g, 1), daxes)
+            sq = jax.lax.psum(jnp.sum(g * g, 1), daxes)
+            cross = jax.lax.psum(g @ g[lead], daxes)
+            return sums, sq, cross
+
+        # data_sh (targets) is replicated inside shard_map via closure; the
+        # sharded view provides the local reference rows.
+        smap = jax.shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P(self.daxes, None), P(self.daxes), P(), P()),
+            out_specs=(P(), P(), P()), check_vma=False)
+
+        def stats_fn(ref_idx, w, lead, rnd):
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed ^ 0x5eed),
+                                     ref_idx[0])
+            return smap(data_sh, dnear, key, lead)
+
+        return stats_fn
+
+    def _swap_stats_fn(self, data_sh, d1, d2, assign, n: int):
+        metric = self.metric
+        k = self.k
+        b_loc = self.batch_size // self.n_shards
+        daxes = self.daxes
+        dist = get_metric(metric)
+        n_loc = n // self.n_shards
+
+        def local(data_l, d1_l, d2_l, a_l, key, lead):
+            ax = jax.lax.axis_index(daxes[0]) if len(daxes) == 1 else (
+                jax.lax.axis_index(daxes[0]) * self.mesh.shape[daxes[1]]
+                + jax.lax.axis_index(daxes[1]))
+            kk = jax.random.fold_in(key, ax)
+            idx = jax.random.randint(kk, (b_loc,), 0, n_loc)
+            dxy = dist(data_sh, data_l[idx])
+            w = jnp.ones((b_loc,), dxy.dtype)
+            sums, sq, cross = _swap_batch_stats(
+                dxy, d1_l[idx], d2_l[idx], a_l[idx], w, k, lead=lead)
+            return (jax.lax.psum(sums, daxes), jax.lax.psum(sq, daxes),
+                    jax.lax.psum(cross, daxes))
+
+        smap = jax.shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P(self.daxes, None), P(self.daxes), P(self.daxes),
+                      P(self.daxes), P(), P()),
+            out_specs=(P(), P(), P()), check_vma=False)
+
+        def stats_fn(ref_idx, w, lead, rnd):
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed ^ 0x50a9),
+                                     ref_idx[0])
+            return smap(data_sh, d1, d2, assign, key, lead)
+
+        return stats_fn
+
+    # -- fit --------------------------------------------------------------
+    def fit(self, data) -> FitResult:
+        data = jnp.asarray(data, jnp.float32)
+        n = data.shape[0]
+        assert n % self.n_shards == 0, (n, self.n_shards)
+        dist = get_metric(self.metric)
+        data_sh = self._shard_data(data)
+        key = jax.random.PRNGKey(self.seed)
+        res = FitResult(medoids=np.zeros(self.k, np.int64), loss=np.inf,
+                        n_swaps=0, converged=False, distance_evals=0)
+
+        # BUILD — replacement-mode sampling (stratified draws), exact
+        # fallback disabled by supplying the exact pass distributed too.
+        dnear = jnp.full((n,), jnp.inf, jnp.float32)
+        med_mask = jnp.zeros((n,), jnp.bool_)
+        medoids = []
+        delta = self.delta if self.delta is not None else 1.0 / (1000.0 * n)
+        evals = 0
+        for _ in range(self.k):
+            key, sub = jax.random.split(key)
+            stats_fn = self._build_stats_fn(data_sh, dnear, n)
+
+            def exact_fn():
+                dxy = dist(data, data)
+                g = _build_g(dxy, dnear)
+                return jnp.mean(g, axis=1)
+
+            sr = adaptive_search(sub, stats_fn=stats_fn, exact_fn=exact_fn,
+                                 n_arms=n, n_ref=n,
+                                 batch_size=self.batch_size, delta=delta,
+                                 active_init=jnp.logical_not(med_mask),
+                                 sampling="replacement", baseline="leader")
+            m = int(sr.best)
+            medoids.append(m)
+            med_mask = med_mask.at[m].set(True)
+            dnear = jnp.minimum(dnear, dist(data[m][None], data)[0])
+            evals += int(sr.n_evals) + n
+        med = jnp.asarray(medoids, jnp.int32)
+
+        # SWAP
+        loss = float(jnp.sum(jnp.min(dist(data, data[med]), 1)))
+        delta_s = self.delta if self.delta is not None else 1.0 / (1000.0 * self.k * n)
+        converged = False
+        for _ in range(self.max_swaps):
+            dmat = dist(data, data[med])
+            assign = jnp.argmin(dmat, 1).astype(jnp.int32)
+            d1 = jnp.min(dmat, 1)
+            d2 = jnp.min(dmat.at[jnp.arange(n), assign].set(jnp.inf), 1)
+            evals += n * self.k
+            key, sub = jax.random.split(key)
+            stats_fn = self._swap_stats_fn(data_sh, d1, d2, assign, n)
+
+            def exact_fn():
+                dxy = dist(data, data)
+                w = jnp.ones((n,), jnp.float32)
+                s, _, _ = _swap_batch_stats(dxy, d1, d2, assign, w, self.k,
+                                            lead=jnp.int32(0))
+                return s / n
+
+            active0 = jnp.tile(jnp.logical_not(med_mask)[None], (self.k, 1)
+                               ).reshape(-1)
+            sr = adaptive_search(sub, stats_fn=stats_fn, exact_fn=exact_fn,
+                                 n_arms=self.k * n, n_ref=n,
+                                 batch_size=self.batch_size, delta=delta_s,
+                                 active_init=active0,
+                                 sampling="replacement", baseline="leader")
+            evals += int(sr.n_evals)
+            m_idx, x_idx = divmod(int(sr.best), n)
+            cand = med.at[m_idx].set(x_idx)
+            new_loss = float(jnp.sum(jnp.min(dist(data, data[cand]), 1)))
+            evals += n * self.k
+            if new_loss < loss - 1e-7 * max(1.0, abs(loss)):
+                old = int(med[m_idx])
+                med = cand
+                med_mask = med_mask.at[old].set(False).at[x_idx].set(True)
+                res.swap_history.append((old, x_idx, new_loss))
+                loss = new_loss
+            else:
+                converged = True
+                break
+
+        res.medoids = np.asarray(med)
+        res.loss = loss
+        res.n_swaps = len(res.swap_history)
+        res.converged = converged
+        res.distance_evals = evals
+        return res
+
+
+class MedoidCurator:
+    """Embedding-space curation for the LM stack: cluster a (possibly
+    sharded) embedding table with distributed BanditPAM, return medoid
+    indices + assignments for coreset batch selection."""
+
+    def __init__(self, k: int, mesh: Optional[Mesh] = None,
+                 metric: str = "cosine", seed: int = 0):
+        self.k, self.mesh, self.metric, self.seed = k, mesh, metric, seed
+
+    def curate(self, embeddings) -> Tuple[np.ndarray, np.ndarray]:
+        from .banditpam import BanditPAM, medoid_cache
+        emb = jnp.asarray(embeddings, jnp.float32)
+        if self.mesh is not None and len(jax.devices()) > 1:
+            fit = DistributedBanditPAM(self.k, self.mesh, metric=self.metric,
+                                       seed=self.seed).fit(emb)
+        else:
+            fit = BanditPAM(self.k, metric=self.metric, seed=self.seed,
+                            baseline="leader").fit(emb)
+        _, _, assign = medoid_cache(emb, jnp.asarray(fit.medoids),
+                                    metric=self.metric)
+        return fit.medoids, np.asarray(assign)

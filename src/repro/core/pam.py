@@ -1,0 +1,131 @@
+"""Exact PAM and FastPAM1 — the deterministic oracles BanditPAM must match.
+
+Both produce *identical* medoids (FastPAM1 is an algebraic rewrite of PAM's
+SWAP search, Appendix 1.1); they differ only in distance-evaluation cost:
+PAM pays ``k·n²`` per SWAP iteration, FastPAM1 pays ``n²``.  BUILD costs
+``n²`` per assignment for both (with the d_near cache).
+
+The argmin tie-breaking (flattened ``m·n + x``, lowest index) matches
+``repro.core.banditpam`` exactly, so "same trajectory" tests are meaningful.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .banditpam import (_build_g, _ref_chunks, _swap_batch_stats,
+                        medoid_cache, total_loss)
+from .distances import get_metric
+
+_CHUNK = 512
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _build_mu_exact(data: jnp.ndarray, dnear: jnp.ndarray, *, metric: str) -> jnp.ndarray:
+    n = data.shape[0]
+    dist = get_metric(metric)
+    idx_np, w_np = _ref_chunks(n, _CHUNK)
+    idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
+
+    def body(acc, iw):
+        i, wc = iw
+        g = _build_g(dist(data, data[i]), dnear[i])
+        return acc + jnp.sum(g * wc[None, :], axis=1), None
+
+    sums, _ = jax.lax.scan(body, jnp.zeros((n,), jnp.float32), (idx, w))
+    return sums / n
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "k"))
+def _swap_mu_exact(data: jnp.ndarray, d1: jnp.ndarray, d2: jnp.ndarray,
+                   assign: jnp.ndarray, *, metric: str, k: int) -> jnp.ndarray:
+    n = data.shape[0]
+    dist = get_metric(metric)
+    idx_np, w_np = _ref_chunks(n, _CHUNK)
+    idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
+
+    def body(acc, iw):
+        i, wc = iw
+        dxy = dist(data, data[i])
+        s, _ = _swap_batch_stats(dxy, d1[i], d2[i], assign[i], wc, k)
+        return acc + s, None
+
+    sums, _ = jax.lax.scan(body, jnp.zeros((k * n,), jnp.float32), (idx, w))
+    return sums / n
+
+
+@dataclass
+class PAMResult:
+    medoids: np.ndarray
+    loss: float
+    n_swaps: int
+    converged: bool
+    distance_evals: int
+    evals_by_phase: Dict[str, int] = field(default_factory=dict)
+    swap_history: List[Tuple[int, int, float]] = field(default_factory=list)
+
+
+def pam(data, k: int, metric: str = "l2", max_swaps: int | None = None,
+        fastpam1: bool = True) -> PAMResult:
+    """Exact PAM (FastPAM1 accounting when ``fastpam1=True``)."""
+    data = jnp.asarray(data, jnp.float32)
+    n = data.shape[0]
+    max_swaps = max_swaps if max_swaps is not None else 4 * k + 10
+    dist = get_metric(metric)
+
+    res = PAMResult(medoids=np.zeros(k, np.int64), loss=np.inf, n_swaps=0,
+                    converged=False, distance_evals=0)
+
+    # ---- BUILD ----
+    dnear = jnp.full((n,), jnp.inf, jnp.float32)
+    med_mask = jnp.zeros((n,), jnp.bool_)
+    medoids: List[int] = []
+    build_evals = 0
+    for _ in range(k):
+        mu = _build_mu_exact(data, dnear, metric=metric)
+        mu = jnp.where(med_mask, jnp.inf, mu)
+        m = int(jnp.argmin(mu))
+        medoids.append(m)
+        med_mask = med_mask.at[m].set(True)
+        dnear = jnp.minimum(dnear, dist(data[m][None, :], data)[0])
+        build_evals += n * n
+    res.evals_by_phase["build"] = build_evals
+
+    # ---- SWAP ----
+    med = jnp.asarray(medoids, jnp.int32)
+    loss = float(total_loss(data, med, metric=metric))
+    swap_evals = 0
+    converged = False
+    for _ in range(max_swaps):
+        d1, d2, assign = medoid_cache(data, med, metric=metric)
+        mu = _swap_mu_exact(data, d1, d2, assign, metric=metric, k=k)
+        mu = jnp.where(jnp.tile(med_mask[None, :], (k, 1)).reshape(-1),
+                       jnp.inf, mu)
+        best = int(jnp.argmin(mu))
+        swap_evals += (n * n) if fastpam1 else (k * n * n)
+        m_idx, x_idx = divmod(best, n)
+        cand = med.at[m_idx].set(x_idx)
+        new_loss = float(total_loss(data, cand, metric=metric))
+        if new_loss < loss - 1e-7 * max(1.0, abs(loss)):
+            old = int(med[m_idx])
+            med = cand
+            med_mask = med_mask.at[old].set(False).at[x_idx].set(True)
+            res.swap_history.append((old, x_idx, new_loss))
+            loss = new_loss
+        else:
+            converged = True
+            break
+    res.evals_by_phase["swap"] = swap_evals
+
+    res.medoids = np.asarray(med)
+    res.loss = loss
+    res.n_swaps = len(res.swap_history)
+    res.converged = converged
+    res.distance_evals = build_evals + swap_evals
+    return res

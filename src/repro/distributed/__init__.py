@@ -1,0 +1,2 @@
+from . import compression, sharding
+from .sharding import set_mesh, shard, sharding_for, spec_for

@@ -1,0 +1,66 @@
+"""int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+Inside a pod, ICI links are fast (~50 GB/s/link); across pods the data-
+center network is the bottleneck, so only the **pod-axis** leg of the
+gradient reduction is compressed:
+
+    g_pod  = full-precision reduction inside the pod (XLA autodiff)
+    q, s   = int8 quantize(g_pod + residual)       (per-tensor scale)
+    G      = sum_p dequant(all_gather(q, s))       (4x fewer bytes than
+                                                    an f32 ring all-reduce)
+    residual' = (g_pod + residual) - dequant(q, s)  (error feedback)
+
+Error feedback makes the compression *unbiased over time*: quantization
+error is carried into the next step instead of being dropped, which keeps
+SGD convergence (Karimireddy et al., 2019).  Validated against the exact
+psum in tests/test_distributed.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x.astype(F32))) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x.astype(F32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(F32) * scale
+
+
+def psum_int8_ef(x: jnp.ndarray, residual: jnp.ndarray, axis_name: str
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compressed psum over `axis_name` with error feedback.
+
+    Must run inside shard_map with `axis_name` manual.  Returns
+    (global_sum ~ psum(x), new_residual).
+    """
+    xr = x.astype(F32) + residual
+    q, scale = quantize_int8(xr)
+    deq_local = dequantize_int8(q, scale)
+    new_residual = xr - deq_local
+    qg = jax.lax.all_gather(q, axis_name)            # [P, ...] int8 on wire
+    sg = jax.lax.all_gather(scale, axis_name)        # [P] scalars
+    total = jnp.tensordot(sg, qg.astype(F32), axes=([0], [0]))
+    return total, new_residual
+
+
+def tree_psum_int8_ef(tree: Any, residuals: Any, axis_name: str
+                      ) -> Tuple[Any, Any]:
+    flat, tdef = jax.tree.flatten(tree)
+    rflat = tdef.flatten_up_to(residuals)
+    outs = [psum_int8_ef(g, r, axis_name) for g, r in zip(flat, rflat)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]))
+
+
+def init_residuals(tree: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, F32), tree)

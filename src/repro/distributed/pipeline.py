@@ -1,0 +1,73 @@
+"""GPipe-style pipeline parallelism over a mesh axis (usually "pod").
+
+A composable schedule, not a model rewrite: hand it a per-stage function
+and per-stage parameters (layers split across the axis), it runs the
+``M + S - 1``-tick bubble schedule with ``ppermute`` hops between stages,
+inside ``shard_map``.  Autodiff through the schedule yields the standard
+GPipe backward (activations stashed per tick by the scan), so
+``jax.grad`` works out of the box.
+
+Trade-off notes (DESIGN.md §6): for the assigned models on a pod-pair,
+pod-as-data + int8-EF-compressed gradient all-reduce moves fewer cross-pod
+bytes than PP activations for train_4k (activations/tick: B·L·d·2 bytes x
+(M+S-1) ticks vs one compressed grad all-reduce); PP wins when the model
+does not fit a single pod's HBM — which is why it ships as a first-class
+option rather than the default.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def gpipe(stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
+          n_stages: int, axis: str = "pod"):
+    """Build the in-shard_map pipeline runner.
+
+    stage_fn: (stage_params, x [mb, ...]) -> y [mb, ...] — one stage's
+      compute (e.g. a scan over that stage's layer slice).
+    Returns runner(stage_params_local, mbs [M, mb, ...]) -> [M, mb, ...]
+      producing the LAST stage's outputs (valid on every rank for ease of
+      loss computation; other ranks compute them redundantly-masked).
+    """
+
+    def runner(stage_params, mbs):
+        s = n_stages
+        sid = jax.lax.axis_index(axis)
+        m = mbs.shape[0]
+        t_total = m + s - 1
+        zero = jnp.zeros_like(mbs[0])
+        perm = [(i, (i + 1) % s) for i in range(s)]
+
+        def tick(buf, t):
+            # stage 0 injects microbatch t (while in range), others take buf
+            inject = mbs[jnp.clip(t, 0, m - 1)]
+            x = jnp.where(sid == 0, inject, buf)
+            y = stage_fn(stage_params, x)
+            buf_next = jax.lax.ppermute(y, axis, perm)
+            return buf_next, y
+
+        _, ys = jax.lax.scan(tick, zero, jnp.arange(t_total))
+        # outputs of the last stage appear at ticks [s-1, s-1+m); broadcast
+        # them to every stage so callers can compute the loss uniformly.
+        out = jax.lax.dynamic_slice_in_dim(ys, s - 1, m, axis=0)
+        # ys holds THIS stage's outputs; select the last stage's via psum
+        # of the masked value (exactly one stage contributes).
+        mask = (sid == s - 1).astype(out.dtype)
+        return jax.lax.psum(out * mask, axis)
+
+    return runner
+
+
+def pipeline_map(stage_fn, mesh: Mesh, n_stages: int, axis: str = "pod",
+                 params_spec=P("pod"), x_spec=P(None)):
+    """shard_map wrapper: params split over the stage axis, microbatches
+    replicated in, last-stage outputs replicated out."""
+    runner = gpipe(stage_fn, n_stages, axis)
+    return jax.shard_map(runner, mesh=mesh, in_specs=(params_spec, x_spec),
+                         out_specs=x_spec, check_vma=False)

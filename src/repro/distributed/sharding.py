@@ -1,0 +1,93 @@
+"""Logical-axis sharding rules -> mesh PartitionSpecs.
+
+Models annotate activations/params with *logical* axis names; the mapping
+to physical mesh axes lives here so the same model code runs on 1 CPU
+device (rules unset -> no-op), a single pod (16x16 data/model) or the
+multi-pod mesh (2x16x16 pod/data/model).
+
+Physical conventions (DESIGN.md §5):
+  batch   -> ("pod", "data")   data parallelism, hierarchical across pods
+  heads   -> "model"           Megatron-style tensor parallelism (q heads)
+  kv_heads-> replicated        GQA: kv head count (8) < model extent (16)
+  ff / d_inner / experts / vocab -> "model"
+  seq     -> None by default; "data" for long-context decode (SP), where
+             the KV/SSM state, not the batch, is the big axis.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+DEFAULT_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "d_model": None,
+    "heads": ("model",),
+    "kv_heads": None,
+    "head_dim": None,
+    "ff": ("model",),
+    "d_inner": ("model",),
+    "ssm_state": None,
+    "experts": ("model",),
+    "vocab": ("model",),
+    "expert_cap": None,
+    "codebooks": None,
+    # Decode caches shard their sequence axis over "model" (SP-for-decode):
+    # the masked cache write is shard-local and the softmax reductions over
+    # the sharded axis communicate only O(B*H) scalars per layer.  The
+    # long-context cell widens this to every mesh axis (launch/dryrun.py).
+    "kv_seq": ("model",),
+}
+
+
+def set_mesh(mesh: Optional[Mesh], rules: Optional[Dict] = None) -> None:
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES, **(rules or {}))
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def clear() -> None:
+    set_mesh(None)
+
+
+def spec_for(*logical_axes: Optional[str]) -> P:
+    """PartitionSpec for a tensor whose dims carry these logical names."""
+    mesh = get_mesh()
+    if mesh is None:
+        return P()
+    rules = getattr(_state, "rules", DEFAULT_RULES)
+    axis_names = set(mesh.axis_names)
+    parts = []
+    for ax in logical_axes:
+        phys = rules.get(ax) if ax is not None else None
+        if phys is None:
+            parts.append(None)
+        else:
+            got = tuple(p for p in phys if p in axis_names)
+            parts.append(got if len(got) > 1 else (got[0] if got else None))
+    return P(*parts)
+
+
+def sharding_for(*logical_axes: Optional[str]) -> Optional[NamedSharding]:
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(*logical_axes))
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    s = sharding_for(*logical_axes)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)

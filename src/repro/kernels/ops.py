@@ -1,0 +1,110 @@
+"""Jit'd public wrappers around the Pallas kernels: padding, cropping,
+interpret-mode selection, and TPU deployment hooks.
+
+On this container (CPU) the kernels execute with ``interpret=True`` — the
+kernel bodies run in Python for correctness validation; on a real TPU
+backend the same code lowers to Mosaic.  ``install()`` re-registers the
+``repro.core.distances`` metrics to the kernel-backed implementations for
+TPU deployment.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import build_g as _build_g
+from . import pairwise as _pairwise
+from . import swap_g as _swap_g
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def pairwise_distance(x: jnp.ndarray, y: jnp.ndarray, metric: str = "l2",
+                      *, tm: int = 128, tr: int = 128,
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
+    """[m, d] x [r, d] -> [m, r] via the tiled Pallas kernel."""
+    if interpret is None:
+        interpret = _default_interpret()
+    m, r = x.shape[0], y.shape[0]
+    xp = _pad_to(_pad_to(x, 1, 128), 0, tm)
+    yp = _pad_to(_pad_to(y, 1, 128), 0, tr)
+    out = _pairwise.pairwise_kernel(xp, yp, metric=metric, tm=tm, tr=tr,
+                                    interpret=interpret)
+    return out[:m, :r]
+
+
+def build_g_stats(x: jnp.ndarray, y: jnp.ndarray, dnear_b: jnp.ndarray,
+                  w: jnp.ndarray, lead_g: Optional[jnp.ndarray] = None,
+                  *, metric: str = "l2", tm: int = 128,
+                  interpret: Optional[bool] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused BUILD statistics: (Σg, Σg², Σg·g_lead) per arm, [m] each."""
+    if interpret is None:
+        interpret = _default_interpret()
+    m = x.shape[0]
+    if lead_g is None:
+        lead_g = jnp.zeros_like(dnear_b)
+    xp = _pad_to(_pad_to(x, 1, 128), 0, tm)
+    yp = _pad_to(_pad_to(y, 1, 128), 0, 128)
+    pad_b = yp.shape[0] - y.shape[0]
+    dn = jnp.pad(dnear_b, (0, pad_b))
+    wp = jnp.pad(w, (0, pad_b))               # padded refs get weight 0
+    lg = jnp.pad(lead_g, (0, pad_b))
+    sums, sq, cross = _build_g.build_g_kernel(xp, yp, dn, wp, lg,
+                                              metric=metric, tm=tm,
+                                              interpret=interpret)
+    return sums[:m], sq[:m], cross[:m]
+
+
+def swap_g_stats(x: jnp.ndarray, y: jnp.ndarray, d1_b: jnp.ndarray,
+                 d2_b: jnp.ndarray, assign_b: jnp.ndarray, w: jnp.ndarray,
+                 k: int, lead_g: Optional[jnp.ndarray] = None,
+                 *, metric: str = "l2", tm: int = 128,
+                 interpret: Optional[bool] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused SWAP (FastPAM1) statistics: (Σg, Σg², Σg·g_lead), each [k, m]
+    for the flattened arm set (medoid m_i, candidate x_j)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    m = x.shape[0]
+    if lead_g is None:
+        lead_g = jnp.zeros_like(d1_b)
+    xp = _pad_to(_pad_to(x, 1, 128), 0, tm)
+    yp = _pad_to(_pad_to(y, 1, 128), 0, 128)
+    pad_b = yp.shape[0] - y.shape[0]
+    d1 = jnp.pad(d1_b, (0, pad_b))
+    d2 = jnp.pad(d2_b, (0, pad_b))
+    wp = jnp.pad(w, (0, pad_b))
+    lg = jnp.pad(lead_g * w, (0, pad_b))      # leader row must be w-masked
+    oh = jax.nn.one_hot(assign_b, k, dtype=jnp.float32) * w[:, None]
+    oh = _pad_to(_pad_to(oh, 1, 128), 0, 128)
+    sums, sq, cross = _swap_g.swap_g_kernel(xp, yp, d1, d2, oh, lg,
+                                            metric=metric, tm=tm,
+                                            interpret=interpret)
+    return sums[:m, :k].T, sq[:m, :k].T, cross[:m, :k].T
+
+
+def install(metrics=("l2", "l2sq", "cosine", "l1")) -> None:
+    """Re-register core distance metrics to the kernel-backed paths
+    (TPU deployment hook; a no-op semantically — same math)."""
+    from repro.core import distances as core_distances
+
+    for name in metrics:
+        core_distances.register_metric(
+            name, functools.partial(pairwise_distance, metric=name))

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against
+(``tests/test_kernels_*.py`` sweeps shapes/dtypes with interpret=True).
+They intentionally share NO code with the kernels themselves; they mirror
+the math of ``repro.core`` directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_ref(x: jnp.ndarray, y: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """[m, d] x [r, d] -> [m, r] dissimilarity."""
+    if metric == "l2sq":
+        return jnp.maximum(
+            jnp.sum(x * x, -1)[:, None] + jnp.sum(y * y, -1)[None, :]
+            - 2.0 * x @ y.T, 0.0)
+    if metric == "l2":
+        return jnp.sqrt(pairwise_ref(x, y, "l2sq"))
+    if metric == "cosine":
+        xn = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-15)
+        yn = y / jnp.maximum(jnp.linalg.norm(y, axis=-1, keepdims=True), 1e-15)
+        return 1.0 - xn @ yn.T
+    if metric == "l1":
+        return jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+    raise ValueError(metric)
+
+
+def build_g_ref(x, y, dnear_b, w, metric: str):
+    """Fused BUILD statistics oracle.
+
+    Returns (sums[m], sqsums[m]): weighted per-arm sums of
+    g_x(y_j) = (d(x, y_j) - dnear_j) ∧ 0   (or d itself where dnear = +inf).
+    """
+    dxy = pairwise_ref(x, y, metric)
+    dn = dnear_b[None, :]
+    g = jnp.where(jnp.isinf(dn), dxy, jnp.minimum(dxy - dn, 0.0)) * w[None, :]
+    return jnp.sum(g, -1), jnp.sum(g * g, -1)
+
+
+def swap_g_ref(x, y, d1_b, d2_b, assign_b, w, k: int, metric: str):
+    """Fused SWAP (FastPAM1, Eq. 12) statistics oracle.
+
+    Returns (sums[k, m], sqsums[k, m]) for arms (medoid m_i, candidate x_j),
+    computed via the dense [k, m, B] tensor (oracle only — the kernel never
+    materialises it).
+    """
+    dxy = pairwise_ref(x, y, metric)                    # [m, B]
+    in_cm = assign_b[None, :] == jnp.arange(k)[:, None]   # [k, B]
+    g = jnp.where(in_cm[:, None, :],
+                  -d1_b[None, None, :] + jnp.minimum(d2_b[None, None, :], dxy[None]),
+                  -d1_b[None, None, :] + jnp.minimum(d1_b[None, None, :], dxy[None]))
+    g = g * w[None, None, :]
+    return jnp.sum(g, -1), jnp.sum(g * g, -1)

@@ -1,0 +1,241 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract the roofline inputs (HLO FLOPs / bytes, per-collective traffic,
+per-device memory) — proof the distribution config is coherent without
+real hardware.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_1_7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+Results append incrementally to results/dryrun.json (one JSON object per
+line), so a crashed batch resumes where it left off.
+"""
+
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices so
+# jax.make_mesh can build the production meshes.  MUST precede any jax
+# import, including the repro ones below.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, supports_long_context
+from repro.distributed import sharding as shrules
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _type_bytes(tystr: str) -> int:
+    m = _TYPE_RE.match(tystr)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+_COLL_RE = re.compile(
+    r"=\s+(.+?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum RESULT bytes of every collective op in the (per-device,
+    post-SPMD) HLO module, by op kind.  Post-opt HLO references operands
+    as bare %names, so the result type (possibly a tuple) is the reliable
+    size source; for all-reduce it equals the shard size, for all-gather
+    it is the gathered size — a consistent upper bound on wire traffic."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_ty, kind = m.groups()
+        nbytes = sum(_type_bytes(f"{dt}[{dims}]")
+                     for dt, dims in _TYPE_RE.findall(result_ty))
+        out[kind] += nbytes
+        counts[kind] += 1
+    return out, counts
+
+
+def _compile_once(cfg, shape, mesh):
+    fn, args, in_sh, out_sh = build_cell(cfg, shape, mesh)
+    lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
+    return lowered.compile()
+
+
+def _measure(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    cbytes, ccounts = collective_bytes(hlo)
+    return {"flops": float(cost.get("flops", -1)),
+            "bytes_accessed": float(cost.get("bytes accessed", -1)),
+            "collective_bytes": cbytes, "collective_counts": ccounts}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             surrogates: bool = True) -> dict:
+    """Compile the full cell (memory proof) plus — on the single-pod mesh —
+    two reduced-depth surrogates (1 and 2 layer groups) whose difference
+    gives the per-group cost.  cost_analysis counts a lax.scan body ONCE,
+    so the loop-corrected per-device totals are
+
+        total = microbatches x (A + (G - 1) x (B - A))       (+opt, <<1%)
+
+    where A/B are the 1-/2-group measurements with identical batch shapes.
+    The attention kv loop is unrolled during the dry-run (layers.UNROLL_KV)
+    so intra-group costs carry no hidden loops either.
+    """
+    import dataclasses
+
+    from repro.models import layers as L
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if shape_name == "long_500k" and not supports_long_context(cfg):
+        rec["status"] = "skipped (pure full attention)"
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = {}
+    if shape_name == "long_500k":
+        rules = {"batch": None, "kv_seq": tuple(mesh.axis_names)}
+    shrules.set_mesh(mesh, rules)
+    L.UNROLL_KV = True
+    try:
+        t0 = time.time()
+        compiled = _compile_once(cfg, shape, mesh)
+        rec["compile_s"] = round(time.time() - t0, 1)
+        rec.update(_measure(compiled))
+        try:
+            mem = compiled.memory_analysis()
+            rec["mem"] = {
+                "arg_bytes": getattr(mem, "argument_size_in_bytes", -1),
+                "out_bytes": getattr(mem, "output_size_in_bytes", -1),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+                "code_bytes": getattr(mem, "generated_code_size_in_bytes", -1),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", -1),
+            }
+        except Exception as e:          # backend may not support it
+            rec["mem"] = {"error": str(e)}
+        del compiled
+
+        if surrogates and not multi_pod:
+            from repro.models import model as Mmod
+            p = len(cfg.layer_pattern)
+            g = cfg.n_groups
+            m = shape.microbatches if shape.kind == "train" else 1
+            # one-microbatch worth of batch, no scans anywhere
+            s_shape = dataclasses.replace(
+                shape, global_batch=shape.global_batch // m, microbatches=1)
+            Mmod.UNROLL_SCANS = True
+            try:
+                a = _measure(_compile_once(
+                    dataclasses.replace(cfg, n_layers=p), s_shape, mesh))
+                b = _measure(_compile_once(
+                    dataclasses.replace(cfg, n_layers=2 * p), s_shape, mesh))
+            finally:
+                Mmod.UNROLL_SCANS = False
+
+            def corrected(key):
+                if isinstance(a[key], dict):
+                    return {kk: m * (a[key][kk] + (g - 1) * (b[key][kk] - a[key][kk]))
+                            for kk in a[key]}
+                return m * (a[key] + (g - 1) * (b[key] - a[key]))
+
+            rec["corrected"] = {
+                "flops": corrected("flops"),
+                "bytes_accessed": corrected("bytes_accessed"),
+                "collective_bytes": corrected("collective_bytes"),
+            }
+        pc = cfg.param_count()
+        rec["params_total"] = pc["total"]
+        rec["params_active"] = pc["active"]
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["trace"] = traceback.format_exc()[-2000:]
+    finally:
+        L.UNROLL_KV = False
+        shrules.clear()
+    return rec
+
+
+def load_done(path: str):
+    done = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped (pure full attention)"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+    return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    done = set() if args.force else load_done(args.out)
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                if (arch, shape, mesh_name) in done:
+                    print(f"[skip-done] {arch} {shape} {mesh_name}", flush=True)
+                    continue
+                print(f"[run] {arch} {shape} {mesh_name}", flush=True)
+                rec = run_cell(arch, shape, mp)
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+                msg = rec["status"]
+                if rec["status"] == "ok":
+                    msg += (f" flops={rec['flops']:.3e}"
+                            f" compile={rec['compile_s']}s")
+                elif rec["status"] == "error":
+                    msg += " :: " + rec["error"][:200]
+                print(f"  -> {msg}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

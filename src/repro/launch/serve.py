@@ -1,0 +1,84 @@
+"""Production serving driver: batched prefill + continuous greedy decode
+with sharded caches, request batching, and simple latency accounting.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1_7b --reduced \
+        --requests 8 --prompt-len 32 --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_reduced
+from repro.distributed import sharding as shrules
+from repro.models import model as M
+from repro.runtime.elastic import build_mesh, plan_remesh
+from repro.serve import make_decode_step, make_prefill_step
+from repro.train import synthetic_batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--model-parallel", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    n_dev = len(jax.devices())
+    if n_dev > 1:
+        plan = plan_remesh(n_dev, model_parallel=min(args.model_parallel, n_dev))
+        shrules.set_mesh(build_mesh(plan))
+        print(f"mesh: {plan.shape} {plan.axes}")
+
+    dtype = jnp.float32 if n_dev == 1 else jnp.bfloat16
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype)
+    cache_len = args.prompt_len + args.max_new
+
+    batch = synthetic_batch(cfg, args.requests, args.prompt_len, 0)
+    prompts = {"tokens": batch["tokens"]}
+    if "patch_emb" in batch:
+        prompts["patch_emb"] = batch["patch_emb"]
+
+    prefill = jax.jit(make_prefill_step(cfg, cache_len=cache_len))
+    decode = jax.jit(make_decode_step(cfg))
+
+    t0 = time.time()
+    logits, state = prefill(params, prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if cfg.frontend == "audio_stub":
+        tok = tok.reshape(args.requests, 1, cfg.n_codebooks)
+    else:
+        tok = tok.reshape(args.requests, 1)
+
+    lat = []
+    out = [tok]
+    for i in range(args.max_new - 1):
+        t1 = time.time()
+        logits, state = decode(params, state, {"tokens": tok},
+                               jnp.int32(args.prompt_len + i))
+        jax.block_until_ready(logits)
+        lat.append(time.time() - t1)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(tok)
+
+    lat_sorted = sorted(lat[1:]) or [0.0]
+    p50 = lat_sorted[len(lat_sorted) // 2]
+    p99 = lat_sorted[min(len(lat_sorted) - 1, int(len(lat_sorted) * 0.99))]
+    print(f"prefill: {t_prefill*1e3:.0f} ms (incl. compile) for "
+          f"{args.requests}x{args.prompt_len}")
+    print(f"decode:  p50 {p50*1e3:.1f} ms/step, p99 {p99*1e3:.1f} ms/step, "
+          f"throughput {args.requests/max(p50,1e-9):.0f} tok/s steady-state")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,250 @@
+"""ShapeDtypeStruct input specs and sharding assignment for every
+(arch x shape) cell — the glue between configs, models, and the mesh.
+
+``input_specs`` returns weak-type-correct, shardable stand-ins (no device
+allocation); ``cell_shardings`` maps every leaf of (params, opt, batch,
+state) to a NamedSharding derived from the parameter naming conventions.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as M
+from repro.train import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs; no allocation anywhere)
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    b, l = shape.global_batch, shape.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    if shape.kind == "decode":
+        if cfg.frontend == "audio_stub":
+            return {"tokens": SDS((b, 1, cfg.n_codebooks), i32)}
+        return {"tokens": SDS((b, 1), i32)}
+    if cfg.frontend == "audio_stub":
+        out = {"tokens": SDS((b, l, cfg.n_codebooks), i32),
+               "labels": SDS((b, l, cfg.n_codebooks), i32)}
+    elif cfg.frontend == "vision_stub":
+        out = {"tokens": SDS((b, l - cfg.n_patches), i32),
+               "patch_emb": SDS((b, cfg.n_patches, cfg.d_model), f32),
+               "labels": SDS((b, l), i32)}
+    else:
+        out = {"tokens": SDS((b, l), i32), "labels": SDS((b, l), i32)}
+    if shape.kind == "train":
+        out["loss_mask"] = SDS((b, l), f32)
+    else:                     # prefill uses tokens (+patches) only
+        out.pop("labels")
+    return out
+
+
+def params_specs(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: M.init_params(
+        cfg, jax.random.PRNGKey(0), dtype=dtype))
+
+
+def opt_specs(cfg: ArchConfig, params_tree, opt_cfg: OptConfig):
+    return jax.eval_shape(lambda: init_opt_state(params_tree, opt_cfg))
+
+
+def state_specs(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: M.init_decode_state(
+        cfg, shape.global_batch, shape.seq_len, dtype=dtype))
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def _axes(mesh: Mesh):
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    mp = "model" if "model" in names else None
+    return dp, mp
+
+
+# parameter path regex -> spec builder (dp=data axes, mp=model axis);
+# first match wins, so the MoE (leading expert axis) rules come first.
+_PARAM_RULES = [
+    (r"moe.*\['wi'\]$",   lambda dp, mp: P(mp, None, None)),
+    (r"moe.*\['wg'\]$",   lambda dp, mp: P(mp, None, None)),
+    (r"moe.*\['wo'\]$",   lambda dp, mp: P(mp, None, None)),
+    (r"\['router'\]$",    lambda dp, mp: P(None, None)),
+    # attention / shared-attention projections
+    (r"\['wq'\]$",        lambda dp, mp: P(None, mp)),
+    (r"\['wk'\]$",        lambda dp, mp: P(None, None)),   # kv replicated (GQA)
+    (r"\['wv'\]$",        lambda dp, mp: P(None, None)),
+    (r"\['wo'\]$",        lambda dp, mp: P(mp, None)),
+    # dense mlp
+    (r"\['wi'\]$",        lambda dp, mp: P(None, mp)),
+    (r"\['wg'\]$",        lambda dp, mp: P(None, mp)),
+    # ssm
+    (r"\['in_x'\]$",      lambda dp, mp: P(None, mp)),
+    (r"\['in_z'\]$",      lambda dp, mp: P(None, mp)),
+    (r"\['in_xbc'\]$",    lambda dp, mp: P(None, None)),   # mixed di+2st cols
+    (r"\['in_dt'\]$",     lambda dp, mp: P(None, mp)),
+    (r"\['x_proj'\]$",    lambda dp, mp: P(mp, None)),
+    (r"\['dt_proj'\]$",   lambda dp, mp: P(None, mp)),
+    (r"\['out_proj'\]$",  lambda dp, mp: P(mp, None)),
+    # embeddings / heads
+    (r"\['embed'\]$",     lambda dp, mp: P(mp, None)),
+    (r"\['lm_head'\]$",   lambda dp, mp: P(None, mp)),
+    (r"\['vision_proj'\]$", lambda dp, mp: P(None, None)),
+]
+
+
+def _param_spec(path_str: str, leaf, dp, mp, cfg: ArchConfig) -> P:
+    ndim = len(leaf.shape)
+    for pat, fn in _PARAM_RULES:
+        if re.search(pat, path_str):
+            spec = fn(dp, mp)
+            base = list(spec)
+            if "groups" in path_str:          # stacked [G, ...] leaves
+                base = [None] + base
+            if cfg.frontend == "audio_stub" and \
+                    re.search(r"\['(embed|lm_head)'\]$", path_str):
+                base = [None] + base          # leading codebook axis
+            base = base[:ndim] + [None] * (ndim - len(base))
+            return P(*base)
+    return P(*([None] * ndim))                # norms, scalars, biases
+
+
+def param_shardings(cfg: ArchConfig, params_tree, mesh: Mesh):
+    dp, mp = _axes(mesh)
+
+    def assign(path, leaf):
+        return NamedSharding(mesh, _param_spec(
+            jax.tree_util.keystr(path), leaf, dp, mp, cfg))
+
+    return jax.tree_util.tree_map_with_path(assign, params_tree)
+
+
+def opt_shardings(cfg: ArchConfig, opt_tree, mesh: Mesh):
+    """Moments mirror the parameter shardings; step is replicated."""
+    p_sh = param_shardings(cfg, opt_tree["m"], mesh)
+    return {"m": p_sh, "v": param_shardings(cfg, opt_tree["v"], mesh),
+            "step": NamedSharding(mesh, P())}
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeConfig, batch_tree,
+                    mesh: Mesh):
+    dp, mp = _axes(mesh)
+    bspec = dp if shape.global_batch > 1 else None
+
+    def assign(path, leaf):
+        ndim = len(leaf.shape)
+        return NamedSharding(mesh, P(bspec, *([None] * (ndim - 1))))
+
+    return jax.tree_util.tree_map_with_path(assign, batch_tree)
+
+
+def decode_state_shardings(cfg: ArchConfig, shape: ShapeConfig, state_tree,
+                           mesh: Mesh):
+    """Caches: [G, B, S, KVH, hd] — batch over data axes; the long-context
+    (batch=1) cell shards the sequence axis over everything (SP decode);
+    SSM states shard d_inner/heads over model."""
+    dp, mp = _axes(mesh)
+    long_ctx = shape.global_batch == 1
+    all_axes = tuple(a for a in mesh.axis_names)
+
+    def assign(path, leaf):
+        ndim = len(leaf.shape)
+        if ndim == 5:                                  # kv cache [G,B,S,KVH,hd]
+            if long_ctx:
+                return NamedSharding(mesh, P(None, None, all_axes, None, None))
+            return NamedSharding(mesh, P(None, dp, mp, None, None))
+        if ndim == 4:                                  # conv [G,B,K-1,C] or
+            ps = "conv" if leaf.shape[2] <= 8 else None
+            if ps == "conv":
+                return NamedSharding(
+                    mesh, P(None, None if long_ctx else dp, None, mp))
+            return NamedSharding(mesh, P(None, None if long_ctx else dp, mp, None))
+        if ndim == 3:
+            return NamedSharding(mesh, P(None, None if long_ctx else dp, mp))
+        # mamba2 h [G,B,nh,hd,st] is ndim 5 too — handled above by S-heur?
+        return NamedSharding(mesh, P(*([None] * ndim)))
+
+    def assign_safe(path, leaf):
+        ndim = len(leaf.shape)
+        # distinguish kv cache [G,B,S,KVH,hd] from mamba2 h [G,B,nh,hd,st]
+        if ndim == 5 and leaf.shape[2] >= 512:         # big axis = sequence
+            if long_ctx:
+                return NamedSharding(mesh, P(None, None, all_axes, None, None))
+            return NamedSharding(mesh, P(None, dp, mp, None, None))
+        if ndim == 5:                                  # mamba2 state
+            return NamedSharding(
+                mesh, P(None, None if long_ctx else dp, mp, None, None))
+        return assign(path, leaf)
+
+    return jax.tree_util.tree_map_with_path(assign_safe, state_tree)
+
+
+# ---------------------------------------------------------------------------
+# cell assembly: (step_fn, example args, in/out shardings)
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               opt_cfg: Optional[OptConfig] = None):
+    """Returns (fn, args, in_shardings, out_shardings) ready for
+    jax.jit(fn, in_shardings=...).lower(*args)."""
+    if opt_cfg is None:
+        opt_cfg = OptConfig(moment_dtype=cfg.moment_dtype)
+    repl = NamedSharding(mesh, P())
+    p_specs = params_specs(cfg)
+    p_sh = param_shardings(cfg, p_specs, mesh)
+    b_specs = batch_specs(cfg, shape)
+    b_sh = batch_shardings(cfg, shape, b_specs, mesh)
+
+    if shape.kind == "train":
+        o_specs = opt_specs(cfg, p_specs, opt_cfg)
+        o_sh = opt_shardings(cfg, o_specs, mesh)
+        fn = make_train_step(cfg, opt_cfg, microbatches=shape.microbatches)
+        args = (p_specs, o_specs, b_specs)
+        in_sh = (p_sh, o_sh, b_sh)
+        out_sh = (p_sh, o_sh,
+                  jax.tree.map(lambda _: repl,
+                               {"loss": 0, "ce": 0, "aux": 0,
+                                "grad_norm": 0, "lr": 0}))
+        return fn, args, in_sh, out_sh
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, cache_len=shape.seq_len)
+        s_specs = jax.eval_shape(fn, p_specs, b_specs)[1]
+        s_sh = decode_state_shardings(cfg, shape, s_specs, mesh)
+        dp, mp = _axes(mesh)
+        if cfg.frontend == "audio_stub":      # logits [B, 1, nc, V]
+            logits_sh = NamedSharding(mesh, P(dp, None, None, mp))
+        else:
+            logits_sh = NamedSharding(mesh, P(dp, None, mp))
+        args = (p_specs, b_specs)
+        return fn, args, (p_sh, b_sh), (logits_sh, s_sh)
+
+    # decode
+    fn = make_decode_step(cfg)
+    s_specs = state_specs(cfg, shape)
+    s_sh = decode_state_shardings(cfg, shape, s_specs, mesh)
+    pos = SDS((), jnp.int32)
+    dp, mp = _axes(mesh)
+    long_ctx = shape.global_batch == 1
+    if cfg.frontend == "audio_stub":
+        logits_sh = NamedSharding(mesh, P(None if long_ctx else dp, None, None, mp))
+    else:
+        logits_sh = NamedSharding(mesh, P(None if long_ctx else dp, None, mp))
+    args = (p_specs, s_specs, b_specs, pos)
+    in_sh = (p_sh, s_sh, b_sh if not long_ctx else
+             jax.tree.map(lambda _: repl, b_specs), repl)
+    return fn, args, in_sh, (logits_sh, s_sh)

@@ -1,0 +1,81 @@
+"""Production training driver: mesh construction, sharded state, data
+pipeline, fault-tolerant loop with checkpoint/resume.
+
+On real hardware (multi-host):  python -m repro.launch.train --arch <id>
+On this container it drives reduced configs on one device — same code
+path, smaller mesh (the 16x16 / 2x16x16 configuration is exercised by
+the dry-run, which this driver shares its cell-assembly with).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, get_reduced
+from repro.distributed import sharding as shrules
+from repro.models import model as M
+from repro.runtime.elastic import build_mesh, plan_remesh
+from repro.runtime.fault import FaultTolerantLoop
+from repro.train import (DataPipeline, OptConfig, init_opt_state,
+                         make_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--model-parallel", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    n_dev = len(jax.devices())
+    mesh = None
+    if n_dev > 1:
+        plan = plan_remesh(n_dev, model_parallel=min(args.model_parallel, n_dev))
+        mesh = build_mesh(plan)
+        shrules.set_mesh(mesh)
+        print(f"mesh: {plan.shape} {plan.axes} (dropped {plan.dropped_chips})")
+
+    dtype = jnp.float32 if n_dev == 1 else jnp.bfloat16
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype)
+    ocfg = OptConfig(lr=1e-3, warmup_steps=20, moment_dtype=cfg.moment_dtype)
+    opt = init_opt_state(params, ocfg)
+    step_fn = jax.jit(make_train_step(cfg, ocfg, args.microbatches))
+    pipe = DataPipeline(cfg, args.batch, args.seq)
+
+    loop = FaultTolerantLoop(args.ckpt_dir, save_every=args.save_every)
+    state = {"params": params, "opt": opt}
+    state, start = loop.restore_or(state)
+    pipe.step = start
+    if start:
+        print(f"resumed at step {start}")
+
+    t0 = time.time()
+
+    def one_step(st, i):
+        batch = next(pipe)
+        p, o, m = step_fn(st["params"], st["opt"], batch)
+        if i % 10 == 0:
+            print(f"step {i:5d} loss {float(m['loss']):.4f} "
+                  f"lr {float(m['lr']):.2e} "
+                  f"({(time.time()-t0):.0f}s)", flush=True)
+        return {"params": p, "opt": o}, m
+
+    loop.run(state, one_step, n_steps=args.steps, start_step=start)
+    print("training complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,239 @@
+"""Shared transformer building blocks: RMSNorm, RoPE, GQA attention
+(global / sliding-window "local" / llama4-style "chunked"), SwiGLU MLP.
+
+Attention is a chunked online-softmax ("flash"-style) implementation:
+
+* prefill/train: an outer *static* loop over query chunks; for each query
+  chunk only the kv chunks its mask can reach are scanned (causal
+  triangle, sliding window, or chunk-diagonal), so HLO FLOPs match the
+  true masked FLOPs — no 2x causal waste, and local layers do O(L·W) not
+  O(L²).  The [Cq, Ck] score tile lives only inside the scan body.
+* decode: single-position path against a (possibly rolling) KV cache with
+  explicit absolute-position masking.
+
+GQA is expressed by broadcasting kv heads to q heads inside the einsum
+(`kv_heads < model-axis extent` makes kv replication the right TP layout;
+q heads shard over "model").
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+# When True the kv-chunk loop unrolls to a python loop instead of lax.scan.
+# Same math/HLO-ops; used by the dry-run so cost_analysis (which counts a
+# scan body once, not x trip-count) sees the true FLOPs.
+UNROLL_KV = False
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(F32)
+    n = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (n * w.astype(F32)).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., L, H, Dh]; pos: [L] absolute positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    ang = pos.astype(F32)[:, None] * freqs[None, :]          # [L, half]
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def _mask(kind: str, window: int, qpos: jnp.ndarray, kpos: jnp.ndarray
+          ) -> jnp.ndarray:
+    """[Cq, Ck] boolean admissibility mask for absolute positions."""
+    q = qpos[:, None]
+    k = kpos[None, :]
+    m = k <= q                                    # causal
+    if kind == "local":
+        m &= k > q - window
+    elif kind == "chunked":
+        m &= (k // window) == (q // window)
+    return m
+
+
+def _kv_range(kind: str, window: int, qo: int, cq: int, ck: int, lk: int
+              ) -> Tuple[int, int]:
+    """Static kv-chunk index range [j0, j1) reachable from q chunk at qo."""
+    hi = min(lk, qo + cq)                         # causal upper bound
+    if kind == "global":
+        lo = 0
+    elif kind == "local":
+        lo = max(0, qo - window + 1)
+    elif kind == "chunked":
+        lo = (qo // window) * window
+    else:
+        raise ValueError(kind)
+    return lo // ck, -(-hi // ck)
+
+
+def _sdpa_chunk(q, k, v, m, l, acc, mask):
+    """One online-softmax accumulation step.
+
+    q: [B, H, Cq, Dh]; k, v: [B, H, Ck, Dh]; mask: [Cq, Ck];
+    m, l: [B, H, Cq]; acc: [B, H, Cq, Dh] (f32).
+    """
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=F32) * scale
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, -1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + jnp.sum(p, -1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bhqk,bhkd->bhqd", p.astype(v.dtype), v, preferred_element_type=F32)
+    return m_new, l_new, acc_new
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, kind: str,
+              window: int, q_chunk: int = 2048, kv_chunk: int = 2048
+              ) -> jnp.ndarray:
+    """Self-attention for prefill/train (Lq == Lk, q offset 0).
+
+    q: [B, L, H, Dh]; k, v: [B, L, KVH, Dh] -> [B, L, H, Dh].
+    """
+    b, lq, h, dh = q.shape
+    lk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    if g > 1:   # broadcast kv heads to q heads (TP: kv replicated)
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qh = jnp.moveaxis(q, 2, 1)            # [B, H, L, Dh]
+    kh = jnp.moveaxis(k, 2, 1)
+    vh = jnp.moveaxis(v, 2, 1)
+
+    cq = min(q_chunk, lq)
+    ck = min(kv_chunk, lk)
+    assert lq % cq == 0 and lk % ck == 0, (lq, cq, lk, ck)
+
+    outs = []
+    for qi in range(lq // cq):
+        qo = qi * cq
+        qblk = qh[:, :, qo:qo + cq]
+        j0, j1 = _kv_range(kind, window, qo, cq, ck, lk)
+        qpos = qo + jnp.arange(cq)
+        m0 = jnp.full((b, h, cq), NEG_INF, F32)
+        l0 = jnp.zeros((b, h, cq), F32)
+        a0 = jnp.zeros((b, h, cq, dh), F32)
+        if UNROLL_KV:
+            m, l, acc = m0, l0, a0
+            for j in range(j0, j1):
+                kc = kh[:, :, j * ck:(j + 1) * ck]
+                vc = vh[:, :, j * ck:(j + 1) * ck]
+                kpos = j * ck + jnp.arange(ck)
+                msk = _mask(kind, window, qpos, kpos)
+                m, l, acc = _sdpa_chunk(qblk, kc, vc, m, l, acc, msk)
+        else:
+            kv_js = jnp.arange(j0, j1)
+            ks = kh[:, :, j0 * ck:j1 * ck].reshape(b, h, j1 - j0, ck, dh)
+            vs = vh[:, :, j0 * ck:j1 * ck].reshape(b, h, j1 - j0, ck, dh)
+
+            def body(carry, xs):
+                m, l, acc = carry
+                j, kc, vc = xs
+                kpos = j * ck + jnp.arange(ck)
+                msk = _mask(kind, window, qpos, kpos)
+                m, l, acc = _sdpa_chunk(qblk, kc, vc, m, l, acc, msk)
+                return (m, l, acc), None
+
+            (m, l, acc), _ = jax.lax.scan(
+                body, (m0, l0, a0),
+                (kv_js, jnp.moveaxis(ks, 2, 0), jnp.moveaxis(vs, 2, 0)))
+        outs.append(acc / jnp.maximum(l[..., None], 1e-30))
+    out = jnp.concatenate(outs, axis=2)                    # [B, H, L, Dh]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     entry_pos: jnp.ndarray, pos: jnp.ndarray, *, kind: str,
+                     window: int) -> jnp.ndarray:
+    """Single-token attention against a cache.
+
+    q: [B, 1, H, Dh]; caches: [B, S_cache, KVH, Dh]; entry_pos: [B, S_cache]
+    absolute positions of cache entries (−1 = empty); pos: [] current
+    absolute position of the query token.
+    """
+    b, _, h, dh = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    qg = q[:, 0].reshape(b, kvh, g, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(F32),
+                   k_cache.astype(F32)) * dh ** -0.5
+    valid = (entry_pos >= 0) & (entry_pos <= pos)
+    if kind == "local":
+        valid &= entry_pos > pos - window
+    elif kind == "chunked":
+        valid &= (entry_pos // window) == (pos // window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(F32))
+    return o.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + rope + norm) and MLP
+# ---------------------------------------------------------------------------
+
+def init_attn(key, d_in: int, n_heads: int, n_kv: int, hd: int, d_out: int,
+              qk_norm: bool, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d_in ** -0.5
+    p = {
+        "wq": (jax.random.normal(k1, (d_in, n_heads * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d_in, n_kv * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d_in, n_kv * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (n_heads * hd, d_out))
+               * (n_heads * hd) ** -0.5).astype(dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def attn_qkv(p: dict, x: jnp.ndarray, pos: jnp.ndarray, *, n_heads: int,
+             n_kv: int, hd: int, theta: float, qk_norm: bool):
+    b, l, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, l, n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, l, n_kv, hd)
+    v = (x @ p["wv"]).reshape(b, l, n_kv, hd)
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope(q, pos, theta)
+    k = rope(k, pos, theta)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def init_mlp(key, d: int, ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": (jax.random.normal(k1, (d, ff)) * d ** -0.5).astype(dtype),
+        "wg": (jax.random.normal(k2, (d, ff)) * d ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(k3, (ff, d)) * ff ** -0.5).astype(dtype),
+    }
+
+
+def mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    h = shard(h, "batch", "seq", "ff")
+    return h @ p["wo"]

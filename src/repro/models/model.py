@@ -1,0 +1,396 @@
+"""Model assembly for all assigned architectures.
+
+One generic decoder stack parameterised by ``ArchConfig.layer_pattern``:
+layers are stacked per *pattern group* and iterated with ``lax.scan`` (one
+compiled group body regardless of depth — essential for 1-CPU-core compile
+times and for clean layer-boundary remat).  Pattern kinds:
+
+  global/local/chunked        — GQA attention (+ SwiGLU MLP or MoE)
+  mamba1 / mamba2             — SSM blocks
+  mamba2+shared_attn          — zamba2: Mamba-2 then the weight-SHARED
+                                attention block on concat[h, x_embed]
+
+Frontend stubs (DESIGN.md §4): vision = precomputed patch embeddings
+(projected + concatenated before the stack); audio = per-codebook embedding
+sum with per-codebook output heads.
+
+Decode state: per pattern-position stacked caches — rolling KV for
+local/chunked layers (window-sized), full-length KV for global layers,
+(conv, h) recurrent state for SSM layers.  Cache-entry absolute positions
+are recovered arithmetically from the decode position, so no validity
+bookkeeping is stored.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (attention, attn_qkv, decode_attention, init_attn,
+                     init_mlp, mlp, rms_norm)
+
+F32 = jnp.float32
+
+# Dry-run cost accounting: when True, the layer-group scans fully unroll so
+# XLA cost_analysis (which counts a scan body once) sees true totals.
+UNROLL_SCANS = False
+
+
+def is_attn_kind(kind: str) -> bool:
+    return kind in ("global", "local", "chunked")
+
+
+def base_kind(kind: str) -> str:
+    return kind.split("+")[0]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ArchConfig, kind: str, key, dtype) -> dict:
+    d = cfg.d_model
+    if is_attn_kind(kind):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {
+            "ln1": jnp.ones((d,), dtype),
+            "attn": init_attn(k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.hd, d,
+                              cfg.qk_norm, dtype),
+            "ln2": jnp.ones((d,), dtype),
+        }
+        if cfg.n_experts > 0:
+            p["moe"] = moe_mod.init_moe(k2, d, cfg.d_ff, cfg.n_experts, dtype)
+            if cfg.moe_dense_residual or cfg.shared_expert:
+                p["dense"] = init_mlp(k3, d, cfg.d_ff, dtype)
+        else:
+            p["mlp"] = init_mlp(k2, d, cfg.d_ff, dtype)
+        return p
+    if base_kind(kind) == "mamba1":
+        return {"ln": jnp.ones((d,), dtype),
+                "m": ssm_mod.init_mamba1(key, cfg, dtype)}
+    if base_kind(kind) == "mamba2":
+        return {"ln": jnp.ones((d,), dtype),
+                "m": ssm_mod.init_mamba2(key, cfg, dtype)}
+    raise ValueError(kind)
+
+
+def _init_shared_attn(cfg: ArchConfig, key, dtype) -> dict:
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((2 * d,), dtype),
+        "attn": init_attn(k1, 2 * d, cfg.n_heads, cfg.n_kv_heads, cfg.hd, d,
+                          cfg.qk_norm, dtype),
+        "ln2": jnp.ones((d,), dtype),
+        "mlp": init_mlp(k2, d, cfg.d_ff, dtype),
+    }
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab
+    params: Dict[str, Any] = {}
+    if cfg.frontend == "audio_stub":
+        params["embed"] = (jax.random.normal(keys[0], (cfg.n_codebooks, v, d))
+                           * d ** -0.5).astype(dtype)
+        params["lm_head"] = (jax.random.normal(keys[1], (cfg.n_codebooks, d, v))
+                             * d ** -0.5).astype(dtype)
+    else:
+        params["embed"] = (jax.random.normal(keys[0], (v, d)) * d ** -0.5).astype(dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (jax.random.normal(keys[1], (d, v))
+                                 * d ** -0.5).astype(dtype)
+    if cfg.frontend == "vision_stub":
+        params["vision_proj"] = (jax.random.normal(keys[2], (d, d))
+                                 * d ** -0.5).astype(dtype)
+    g = cfg.n_groups
+    groups = []
+    for j, kind in enumerate(cfg.layer_pattern):
+        lkeys = jax.random.split(jax.random.fold_in(keys[3], j), g)
+        groups.append(jax.vmap(
+            lambda kk: _init_layer(cfg, kind, kk, dtype))(lkeys))
+    params["groups"] = tuple(groups)
+    if any("shared_attn" in k for k in cfg.layer_pattern):
+        params["shared_attn"] = _init_shared_attn(cfg, keys[4], dtype)
+    params["final_norm"] = jnp.ones((d,), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embedding / frontends
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: ArchConfig, params, batch) -> jnp.ndarray:
+    if cfg.frontend == "audio_stub":
+        codes = batch["tokens"]                     # [B, L, nc]
+        h = sum(jnp.take(params["embed"][c], codes[:, :, c], axis=0)
+                for c in range(cfg.n_codebooks))    # Σ_c embed_c[codes_c]
+    elif cfg.frontend == "vision_stub" and "patch_emb" in batch:
+        # prefill/train: precomputed patch embeddings prefix (decode is
+        # text-only and takes the plain-token path below)
+        tok = jnp.take(params["embed"], batch["tokens"], axis=0)  # [B, Lt, d]
+        patch = batch["patch_emb"].astype(tok.dtype) @ params["vision_proj"]
+        h = jnp.concatenate([patch, tok], axis=1)
+    else:
+        h = jnp.take(params["embed"], batch["tokens"], axis=0)
+    return shard(h, "batch", "seq", "d_model")
+
+
+def unembed(cfg: ArchConfig, params, h: jnp.ndarray) -> jnp.ndarray:
+    if cfg.frontend == "audio_stub":
+        logits = jnp.einsum("bld,cdv->blcv", h, params["lm_head"])
+        return shard(logits, "batch", "seq", "codebooks", "vocab")
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return shard(h @ head, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# layer application (full-sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_ffn(cfg: ArchConfig, lp, h):
+    f_in = rms_norm(h, lp["ln2"])
+    aux = jnp.float32(0.0)
+    if cfg.n_experts > 0:
+        y, aux = moe_mod.moe_layer(lp["moe"], f_in, top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor)
+        if "dense" in lp:
+            y = y + mlp(lp["dense"], f_in)
+    else:
+        y = mlp(lp["mlp"], f_in)
+    return h + y, aux
+
+
+def _apply_attn_layer(cfg: ArchConfig, lp, h, pos, kind: str):
+    a_in = rms_norm(h, lp["ln1"])
+    q, k, v = attn_qkv(lp["attn"], a_in, pos, n_heads=cfg.n_heads,
+                       n_kv=cfg.n_kv_heads, hd=cfg.hd, theta=cfg.rope_theta,
+                       qk_norm=cfg.qk_norm)
+    o = attention(q, k, v, kind=kind, window=cfg.window)
+    b, l = h.shape[:2]
+    h = h + o.reshape(b, l, -1) @ lp["attn"]["wo"]
+    h, aux = _apply_ffn(cfg, lp, h)
+    return h, (k, v), aux
+
+
+def _apply_shared_attn(cfg: ArchConfig, sp, h, x0, pos):
+    inp = jnp.concatenate([h, x0], axis=-1)
+    a_in = rms_norm(inp, sp["ln1"])
+    q, k, v = attn_qkv(sp["attn"], a_in, pos, n_heads=cfg.n_heads,
+                       n_kv=cfg.n_kv_heads, hd=cfg.hd, theta=cfg.rope_theta,
+                       qk_norm=cfg.qk_norm)
+    o = attention(q, k, v, kind="global", window=cfg.window)
+    b, l = h.shape[:2]
+    h = h + o.reshape(b, l, -1) @ sp["attn"]["wo"]
+    m_in = rms_norm(h, sp["ln2"])
+    h = h + mlp(sp["mlp"], m_in)
+    return h, (k, v)
+
+
+def forward(cfg: ArchConfig, params, batch, *, collect_state: bool = False,
+            cache_len: Optional[int] = None):
+    """Full-sequence forward.
+
+    Returns (logits, aux_loss) or, with collect_state, (logits, aux, state)
+    where state matches ``init_decode_state`` layout.
+    """
+    h = embed_inputs(cfg, params, batch)
+    x0 = h
+    l = h.shape[1]
+    pos = jnp.arange(l)
+    s_cache = cache_len if cache_len is not None else l
+    shared = params.get("shared_attn")
+
+    def group_body(carry, gp):
+        h, aux = carry
+        states = []
+        for j, kind in enumerate(cfg.layer_pattern):
+            lp = gp[j]
+            bk = base_kind(kind)
+            if is_attn_kind(bk):
+                h, kv, a = _apply_attn_layer(cfg, lp, h, pos, bk)
+                aux = aux + a
+                if collect_state:
+                    states.append(_fill_kv_cache(kv, _cache_len(cfg, bk, s_cache), l))
+            elif bk == "mamba1":
+                m_in = rms_norm(h, lp["ln"])
+                if collect_state:
+                    y, st = ssm_mod.mamba1_prefill(lp["m"], m_in)
+                    states.append(st)
+                else:
+                    y = ssm_mod.mamba1(lp["m"], m_in)
+                h = h + y
+            elif bk == "mamba2":
+                m_in = rms_norm(h, lp["ln"])
+                if collect_state:
+                    y, st = ssm_mod.mamba2_prefill(lp["m"], m_in)
+                    states.append(st)
+                else:
+                    y = ssm_mod.mamba2(lp["m"], m_in)
+                h = h + y
+            if "shared_attn" in kind:
+                h, kv = _apply_shared_attn(cfg, shared, h, x0, pos)
+                if collect_state:
+                    states.append(_fill_kv_cache(kv, _cache_len(cfg, "global", s_cache), l))
+            h = shard(h, "batch", "seq", "d_model")
+        return (h, aux), tuple(states) if collect_state else None
+
+    body = group_body if collect_state else jax.checkpoint(
+        group_body, policy=jax.checkpoint_policies.nothing_saveable)
+    (h, aux), states = jax.lax.scan(body, (h, jnp.float32(0.0)),
+                                    params["groups"],
+                                    unroll=True if UNROLL_SCANS else 1)
+    h = rms_norm(h, params["final_norm"])
+    logits = unembed(cfg, params, h)
+    if collect_state:
+        return logits, aux, states
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode state
+# ---------------------------------------------------------------------------
+
+def _cache_len(cfg: ArchConfig, kind: str, s: int) -> int:
+    if kind == "global":
+        return s
+    return min(s, cfg.window)
+
+
+def _fill_kv_cache(kv, s_c: int, l: int):
+    """Pack prefill k/v [B, L, KVH, hd] into a rolling cache of length s_c."""
+    k, v = kv
+
+    def pack(a):
+        if s_c >= l:
+            pad = [(0, 0)] * a.ndim
+            pad[1] = (0, s_c - l)
+            return jnp.pad(a, pad)
+        tail = a[:, l - s_c:]
+        return jnp.roll(tail, l % s_c, axis=1)
+
+    return pack(k), pack(v)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, s: int, dtype=jnp.bfloat16):
+    """Empty caches (decode-from-scratch) in the same layout forward(...,
+    collect_state=True) produces: tuple over groups? No — stacked [G, ...]
+    per pattern position, matching lax.scan's ys stacking."""
+    g = cfg.n_groups
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    states = []
+    for kind in cfg.layer_pattern:
+        bk = base_kind(kind)
+        if is_attn_kind(bk):
+            s_c = _cache_len(cfg, bk, s)
+            shp = (g, batch, s_c, kvh, hd)
+            states.append((jnp.zeros(shp, dtype), jnp.zeros(shp, dtype)))
+        elif bk == "mamba1":
+            di, st, k = cfg.di, cfg.ssm_state, cfg.ssm_conv
+            states.append((jnp.zeros((g, batch, k - 1, di), dtype),
+                           jnp.zeros((g, batch, di, st), F32)))
+        elif bk == "mamba2":
+            di, st, k = cfg.di, cfg.ssm_state, cfg.ssm_conv
+            nh = di // cfg.ssm_head_dim
+            conv_dim = di + 2 * st
+            states.append((jnp.zeros((g, batch, k - 1, conv_dim), dtype),
+                           jnp.zeros((g, batch, nh, cfg.ssm_head_dim, st), F32)))
+        if "shared_attn" in kind:
+            s_c = _cache_len(cfg, "global", s)
+            shp = (g, batch, s_c, kvh, hd)
+            states.append((jnp.zeros(shp, dtype), jnp.zeros(shp, dtype)))
+    return tuple(states)
+
+
+def _entry_positions(s_c: int, pos) -> jnp.ndarray:
+    """Absolute position of each rolling-cache slot after writing at `pos`;
+    negative values mark not-yet-written slots."""
+    slot = pos % s_c
+    i = jnp.arange(s_c)
+    return pos - ((slot - i) % s_c)
+
+
+def _decode_attn(cfg, ap, h_in, kv_cache, pos, kind, wo):
+    """Shared decode attention: h_in [B, 1, d_in]; returns (attn_out, cache).
+
+    The cache's sequence axis is model-sharded ("kv_seq" rule); the write
+    is a masked broadcast (shard-local — a dynamic-update-slice on a
+    sharded axis would force a gather), and q stays replicated across
+    "model" so the only cross-device traffic is the softmax/output
+    reduction over the sharded S axis (O(B·H) scalars)."""
+    k_c, v_c = kv_cache
+    s_c = k_c.shape[1]
+    q, k, v = attn_qkv(ap, h_in, pos[None], n_heads=cfg.n_heads,
+                       n_kv=cfg.n_kv_heads, hd=cfg.hd, theta=cfg.rope_theta,
+                       qk_norm=cfg.qk_norm)
+    q = shard(q, "batch", None, None, None)
+    slot = pos % s_c
+    slot_mask = (jnp.arange(s_c) == slot)[None, :, None, None]
+    k_c = jnp.where(slot_mask, k.astype(k_c.dtype), k_c)
+    v_c = jnp.where(slot_mask, v.astype(v_c.dtype), v_c)
+    k_c = shard(k_c, "batch", "kv_seq", "kv_heads", "head_dim")
+    v_c = shard(v_c, "batch", "kv_seq", "kv_heads", "head_dim")
+    epos = _entry_positions(s_c, pos)[None, :]
+    o = decode_attention(q, k_c, v_c, epos, pos, kind=kind, window=cfg.window)
+    b = h_in.shape[0]
+    return o.reshape(b, 1, -1) @ wo, (k_c, v_c)
+
+
+def decode_step(cfg: ArchConfig, params, state, batch, pos):
+    """One decode step.  batch["tokens"]: [B, 1] (audio: [B, 1, nc]);
+    pos: scalar absolute position.  Returns (logits, new_state)."""
+    h = embed_inputs(cfg, params, batch)
+    x0 = h
+    shared = params.get("shared_attn")
+
+    def group_body(carry, xs):
+        h = carry
+        gp, caches = xs
+        new_states = []
+        ci = 0
+        for j, kind in enumerate(cfg.layer_pattern):
+            lp = gp[j]
+            bk = base_kind(kind)
+            if is_attn_kind(bk):
+                a_in = rms_norm(h, lp["ln1"])
+                o, kv = _decode_attn(cfg, lp["attn"], a_in, caches[ci], pos,
+                                     bk, lp["attn"]["wo"])
+                h = h + o
+                h, _ = _apply_ffn(cfg, lp, h)
+                new_states.append(kv)
+                ci += 1
+            elif bk == "mamba1":
+                m_in = rms_norm(h, lp["ln"])
+                y, st = ssm_mod.mamba1_decode(lp["m"], m_in, caches[ci])
+                h = h + y
+                new_states.append(st)
+                ci += 1
+            elif bk == "mamba2":
+                m_in = rms_norm(h, lp["ln"])
+                y, st = ssm_mod.mamba2_decode(lp["m"], m_in, caches[ci])
+                h = h + y
+                new_states.append(st)
+                ci += 1
+            if "shared_attn" in kind:
+                inp = jnp.concatenate([h, x0], axis=-1)
+                a_in = rms_norm(inp, shared["ln1"])
+                o, kv = _decode_attn(cfg, shared["attn"], a_in, caches[ci],
+                                     pos, "global", shared["attn"]["wo"])
+                h = h + o
+                h = h + mlp(shared["mlp"], rms_norm(h, shared["ln2"]))
+                new_states.append(kv)
+                ci += 1
+        return h, tuple(new_states)
+
+    h, new_state = jax.lax.scan(group_body, h, (params["groups"], state),
+                                unroll=True if UNROLL_SCANS else 1)
+    h = rms_norm(h, params["final_norm"])
+    logits = unembed(cfg, params, h)
+    return logits, new_state

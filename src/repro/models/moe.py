@@ -1,0 +1,129 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+TPU/SPMD design (hillclimbed — see EXPERIMENTS.md §Perf/arctic):
+
+* Dispatch is **per-data-shard local**: tokens are viewed as
+  [n_data_shards, T_loc, d] (the shard count is static at trace time from
+  the active mesh), and the sort/bucket/scatter runs vmapped per shard with
+  per-shard capacity C_loc = ceil(T_loc·k·cf/E).  Nothing crosses shards.
+* The only cross-device traffic is the expert-axis reshard of the dispatch
+  buffer [E, shards, C_loc, d] from data-sharded to expert(model)-sharded —
+  which is exactly the canonical MoE all-to-all — and its inverse after the
+  expert FFN.  (A naive global scatter into an expert-sharded buffer makes
+  GSPMD all-reduce the whole buffer across every device: ~1600x more bytes;
+  measured in EXPERIMENTS.md.)
+* Dispatch avoids the O(T·E·C) one-hot tensor of GShard: assignments are
+  sorted by expert (stable), position-in-expert comes from sorted segment
+  offsets, and tokens beyond capacity are dropped (Switch semantics).
+
+Supports arctic's parallel dense-residual MLP and llama4's always-on
+shared expert via the caller.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import get_mesh, shard
+
+F32 = jnp.float32
+
+
+def init_moe(key, d: int, ff: int, n_experts: int, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "router": (jax.random.normal(k1, (d, n_experts)) * s).astype(F32),
+        "wi": (jax.random.normal(k2, (n_experts, d, ff)) * s).astype(dtype),
+        "wg": (jax.random.normal(k3, (n_experts, d, ff)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (n_experts, ff, d)) * ff ** -0.5).astype(dtype),
+    }
+
+
+def capacity(t: int, k: int, e: int, cf: float) -> int:
+    c = int(-(-t * k * cf // e))
+    return max(8, -(-c // 8) * 8)     # pad to a multiple of 8 lanes
+
+
+def _n_data_shards() -> int:
+    mesh = get_mesh()
+    if mesh is None:
+        return 1
+    out = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            out *= int(mesh.shape[a])
+    return out
+
+
+def moe_layer(p: dict, x: jnp.ndarray, *, top_k: int, capacity_factor: float
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, L, d] -> (y [B, L, d], aux_loss scalar)."""
+    b, l, d = x.shape
+    e = p["router"].shape[1]
+    t = b * l
+    ns = _n_data_shards()
+    if t % ns:                      # tiny inputs on a big mesh: fall back
+        ns = 1
+    t_loc = t // ns
+    c_loc = capacity(t_loc, top_k, e, capacity_factor)
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(F32) @ p["router"])                   # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, top_k)                  # [T, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- per-shard sort-based dispatch (shard-local by construction) ----
+    def local_dispatch(xt_l, eidx_l):
+        flat_e = eidx_l.reshape(-1)                           # [T_loc*k]
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        tok = order // top_k
+        seg = jnp.searchsorted(sorted_e, jnp.arange(e))
+        pos = jnp.arange(t_loc * top_k) - seg[sorted_e]
+        keep = pos < c_loc
+        slot = jnp.where(keep, sorted_e * c_loc + pos, e * c_loc)
+        buf = jnp.zeros((e * c_loc + 1, d), x.dtype).at[slot].set(xt_l[tok])
+        return buf[:-1].reshape(e, c_loc, d), order, keep, slot
+
+    xt_s = shard(xt.reshape(ns, t_loc, d), "batch", None, None)
+    eidx_s = eidx.reshape(ns, t_loc, top_k)
+    bufs, orders, keeps, slots = jax.vmap(local_dispatch)(xt_s, eidx_s)
+
+    # ---- expert FFN: the E-axis reshard below is the MoE all-to-all ----
+    h = jnp.moveaxis(bufs, 1, 0)                              # [E, ns, C_loc, d]
+    h = shard(h, "experts", "batch", None, None)
+    act = jax.nn.silu(jnp.einsum("encd,edf->encf", h, p["wg"])) \
+        * jnp.einsum("encd,edf->encf", h, p["wi"])
+    act = shard(act, "experts", "batch", None, None)
+    out = jnp.einsum("encf,efd->encd", act, p["wo"])
+    # Keep the combine einsum expert-sharded (weights stay EP-local) and
+    # only THEN reshard the small output — without the intermediate
+    # constraint GSPMD may satisfy the replicated output by all-gathering
+    # the [E, ff, d] WEIGHTS instead (measured 2.6 GB/layer on the
+    # long-context decode cell; EXPERIMENTS §Perf track 1b).
+    out = shard(out, "experts", "batch", None, None)
+    out = shard(out, None, "batch", None, None)               # a2a back
+    out = jnp.moveaxis(out, 0, 1)                             # [ns, E, C_loc, d]
+
+    # ---- per-shard combine ----
+    def local_combine(out_l, order, keep, slot, gate_l):
+        flat = out_l.reshape(e * c_loc, d)
+        gathered = flat[jnp.minimum(slot, e * c_loc - 1)] * keep[:, None].astype(x.dtype)
+        wsel = gate_l.reshape(-1)[order][:, None].astype(x.dtype)
+        tok = order // top_k
+        return jnp.zeros((t_loc, d), x.dtype).at[tok].add(gathered * wsel)
+
+    gate_s = gate.reshape(ns, t_loc, top_k)
+    y = jax.vmap(local_combine)(out, orders, keeps, slots, gate_s)
+    y = shard(y, "batch", None, None).reshape(t, d)
+
+    # ---- load-balancing aux loss (Switch) ----
+    me = probs.mean(0)                                        # [E]
+    ce = jnp.zeros((e,), F32).at[eidx.reshape(-1)].add(1.0) / (t * top_k)
+    aux = e * jnp.sum(me * ce)
+    return y.reshape(b, l, d), aux

@@ -1,0 +1,277 @@
+"""State-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+TPU adaptation (DESIGN.md §3): the recurrences are *not* lowered as
+length-L sequential loops.
+
+* Mamba-1: `h_t = dA_t h_{t-1} + dBx_t` runs as a `jax.lax.associative_scan`
+  over the sequence axis — log-depth, fully vectorized on the VPU.
+* Mamba-2: the SSD chunked form — intra-chunk attention-like matmuls
+  (MXU-shaped [T, T] x [T, hd]) plus an inter-chunk state scan of length
+  L/T.  Scalar-per-head decay makes the chunk math exact.
+
+Decode is the O(1) recurrent step carrying (conv_state, ssm_state).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+F32 = jnp.float32
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d; x [B, L, C], w [K, C], b [C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+def init_mamba1(key, cfg, dtype) -> dict:
+    d, di, st, dtr, k = cfg.d_model, cfg.di, cfg.ssm_state, cfg.dtr, cfg.ssm_conv
+    keys = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "in_x": (jax.random.normal(keys[0], (d, di)) * s).astype(dtype),
+        "in_z": (jax.random.normal(keys[5], (d, di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(keys[1], (k, di)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(keys[2], (di, dtr + 2 * st)) * di ** -0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(keys[3], (dtr, di)) * dtr ** -0.5).astype(dtype),
+        "dt_bias": jnp.full((di,), -2.0, dtype),     # softplus ~ 0.12 init
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, st + 1, dtype=F32)[None, :], (di, 1))),
+        "D": jnp.ones((di,), F32),
+        "out_proj": (jax.random.normal(keys[4], (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def _mamba1_inner(p, xc, dt, Bm, Cm, h0=None, scan_dtype=F32):
+    """Shared selective-scan math.
+
+    xc [B,L,di] (post conv+silu), dt [B,L,di], Bm/Cm [B,L,st].
+    Returns (y [B,L,di], h_last [B,di,st]).
+
+    The associative scan's [B, L, di, state] operands dominate the whole
+    block's HBM traffic (log2 L passes over them).  ``scan_dtype=bf16``
+    halves the scan operands; training numerics are indistinguishable
+    (rel. loss diff ~2e-5 over 10 steps on the reduced config), BUT the
+    dry-run's operand-sum byte metric showed NO win (the inserted convert
+    ops offset the savings; the metric cannot see TPU fusion), so f32
+    stays the measured-default.  EXPERIMENTS §Perf/falcon records the
+    refuted iteration.
+    """
+    A = -jnp.exp(p["A_log"].astype(F32))                       # [di, st]
+    dA = jnp.exp(dt[..., None] * A[None, None])                # [B,L,di,st]
+    dBx = (dt * xc)[..., None] * Bm[:, :, None, :]             # [B,L,di,st]
+    if h0 is not None:
+        # fold the incoming state into the first step
+        dBx = dBx.at[:, 0].add(dA[:, 0] * h0)
+    def combine(a, b):
+        return (a[0] * b[0], b[0] * a[1] + b[1])
+    _, h = jax.lax.associative_scan(
+        combine, (dA.astype(scan_dtype), dBx.astype(scan_dtype)), axis=1)
+    y = jnp.einsum("blds,bls->bld", h, Cm.astype(scan_dtype),
+                   preferred_element_type=F32)
+    return y, h[:, -1].astype(F32)
+
+
+def mamba1(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence Mamba-1 block (train/prefill). x: [B, L, d]."""
+    xin, z = x @ p["in_x"], x @ p["in_z"]
+    xin = shard(xin, "batch", "seq", "d_inner")
+    xc = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"]))
+    proj = xc @ p["x_proj"]
+    dtr = p["dt_proj"].shape[0]
+    st = (proj.shape[-1] - dtr) // 2
+    dt_in, Bm, Cm = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus((dt_in @ p["dt_proj"]).astype(F32)
+                         + p["dt_bias"].astype(F32))
+    y, _ = _mamba1_inner(p, xc.astype(F32), dt, Bm.astype(F32), Cm.astype(F32))
+    y = y + p["D"][None, None] * xc.astype(F32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba1_prefill(p: dict, x: jnp.ndarray):
+    """Full-sequence forward that also returns the decode state."""
+    xin, z = x @ p["in_x"], x @ p["in_z"]
+    xc = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"]))
+    proj = xc @ p["x_proj"]
+    dtr = p["dt_proj"].shape[0]
+    st = (proj.shape[-1] - dtr) // 2
+    dt_in, Bm, Cm = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus((dt_in @ p["dt_proj"]).astype(F32)
+                         + p["dt_bias"].astype(F32))
+    y, h_last = _mamba1_inner(p, xc.astype(F32), dt, Bm.astype(F32),
+                              Cm.astype(F32))
+    y = y + p["D"][None, None] * xc.astype(F32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    k = p["conv_w"].shape[0]
+    conv_tail = xin[:, -(k - 1):, :]
+    return y @ p["out_proj"], (conv_tail, h_last)
+
+
+def mamba1_decode(p: dict, x: jnp.ndarray, state: Tuple[jnp.ndarray, jnp.ndarray]
+                  ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """One-token step. x: [B, 1, d]; state = (conv [B, K-1, di], h [B, di, st])."""
+    conv_st, h = state
+    xin, z = x @ p["in_x"], x @ p["in_z"]
+    window = jnp.concatenate([conv_st, xin], axis=1)          # [B, K, di]
+    k = p["conv_w"].shape[0]
+    xc = jnp.einsum("bkc,kc->bc", window.astype(F32),
+                    p["conv_w"].astype(F32)) + p["conv_b"].astype(F32)
+    xc = jax.nn.silu(xc)[:, None, :]                           # [B,1,di]
+    proj = xc.astype(x.dtype) @ p["x_proj"]
+    dtr = p["dt_proj"].shape[0]
+    st_dim = (proj.shape[-1] - dtr) // 2
+    dt_in, Bm, Cm = jnp.split(proj, [dtr, dtr + st_dim], axis=-1)
+    dt = jax.nn.softplus((dt_in @ p["dt_proj"]).astype(F32)
+                         + p["dt_bias"].astype(F32))[:, 0]     # [B, di]
+    A = -jnp.exp(p["A_log"].astype(F32))
+    dA = jnp.exp(dt[..., None] * A[None])                      # [B, di, st]
+    h_new = dA * h + (dt * xc[:, 0])[..., None] * Bm.astype(F32)[:, 0, None, :]
+    y = jnp.einsum("bds,bs->bd", h_new, Cm.astype(F32)[:, 0])
+    y = y + p["D"][None] * xc[:, 0]
+    y = (y[:, None].astype(x.dtype)) * jax.nn.silu(z)
+    return y @ p["out_proj"], (window[:, 1:], h_new)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD chunked)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg, dtype) -> dict:
+    d, di, st, k = cfg.d_model, cfg.di, cfg.ssm_state, cfg.ssm_conv
+    nh = di // cfg.ssm_head_dim
+    keys = jax.random.split(key, 5)
+    s = d ** -0.5
+    conv_dim = di + 2 * st
+    return {
+        "in_z": (jax.random.normal(keys[0], (d, di)) * s).astype(dtype),
+        "in_xbc": (jax.random.normal(keys[3], (d, di + 2 * st)) * s).astype(dtype),
+        "in_dt": (jax.random.normal(keys[4], (d, nh)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(keys[1], (k, conv_dim)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.full((nh,), -2.0, F32),
+        "A_log": jnp.zeros((nh,), F32),
+        "D": jnp.ones((nh,), F32),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": (jax.random.normal(keys[2], (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def _ssd_chunked(xh, Bm, Cm, loga, chunk: int):
+    """SSD: xh [B,L,nh,hd], Bm/Cm [B,L,st], loga [B,L,nh] (log decay ≤ 0).
+    Returns (y [B,L,nh,hd], h_final [B,nh,hd,st])."""
+    b, l, nh, hd = xh.shape
+    st = Bm.shape[-1]
+    t = min(chunk, l)
+    assert l % t == 0
+    nc = l // t
+    xh_ = xh.reshape(b, nc, t, nh, hd)
+    B_ = Bm.reshape(b, nc, t, st)
+    C_ = Cm.reshape(b, nc, t, st)
+    la = loga.reshape(b, nc, t, nh)
+    lcum = jnp.cumsum(la, axis=2)                               # [b,nc,t,nh]
+    # intra-chunk: scores[i,j] = exp(lcum_i - lcum_j) * (C_i . B_j), j <= i
+    g = jnp.einsum("bcis,bcjs->bcij", C_, B_)                   # [b,nc,t,t]
+    decay = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]     # [b,nc,i,j,nh]
+    mask = (jnp.arange(t)[:, None] >= jnp.arange(t)[None, :])
+    w = jnp.where(mask[None, None, :, :, None],
+                  jnp.exp(decay), 0.0) * g[..., None]           # [b,nc,i,j,nh]
+    y_intra = jnp.einsum("bcijh,bcjhd->bcihd", w, xh_)
+    # chunk states: S_c = sum_j exp(lT - lcum_j) * B_j ⊗ x_j
+    ldec = lcum[:, :, -1:, :] - lcum                            # [b,nc,t,nh]
+    xw = xh_ * jnp.exp(ldec)[..., None]
+    S = jnp.einsum("bcjs,bcjhd->bchds", B_, xw)                 # [b,nc,nh,hd,st]
+    # inter-chunk scan: S_in[c] = decay_total[c-1] * S_in[c-1] + S[c-1]
+    total = jnp.exp(lcum[:, :, -1, :])                          # [b,nc,nh]
+
+    def step(carry, xs):
+        tot, s_c = xs
+        out = carry
+        new = tot[..., None, None] * carry + s_c
+        return new, out
+
+    init = jnp.zeros((b, nh, hd, st), F32)
+    S_final, S_in = jax.lax.scan(
+        step, init, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(S, 1, 0)))
+    S_in = jnp.moveaxis(S_in, 0, 1)                             # state entering chunk c
+    y_inter = jnp.einsum("bcis,bchds->bcihd", C_, S_in) \
+        * jnp.exp(lcum)[..., None]
+    y = (y_intra + y_inter).reshape(b, l, nh, hd)
+    return y, S_final
+
+
+def _mamba2_fwd(p: dict, x: jnp.ndarray, chunk: int):
+    b, l, _ = x.shape
+    di = p["out_proj"].shape[0]
+    nh = p["A_log"].shape[0]
+    hd = di // nh
+    st = (p["in_xbc"].shape[1] - di) // 2
+    z = x @ p["in_z"]
+    xbc = x @ p["in_xbc"]
+    dt_in = x @ p["in_dt"]
+    xbc = shard(xbc, "batch", "seq", "d_inner")
+    xbc_conv = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xin, Bm, Cm = jnp.split(xbc_conv, [di, di + st], axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(F32) + p["dt_bias"][None, None])
+    loga = -jnp.exp(p["A_log"])[None, None] * dt                # [B,L,nh] ≤ 0
+    xh = (xin.astype(F32) * dt.repeat(hd, axis=-1)).reshape(b, l, nh, hd)
+    y, h_final = _ssd_chunked(xh, Bm.astype(F32), Cm.astype(F32), loga, chunk)
+    y = y + p["D"][None, None, :, None] * xin.astype(F32).reshape(b, l, nh, hd)
+    y = y.reshape(b, l, di).astype(x.dtype)
+    y = rms_norm_gated(y, z, p["norm_w"])
+    k = p["conv_w"].shape[0]
+    return y @ p["out_proj"], (xbc[:, -(k - 1):, :], h_final)
+
+
+def mamba2(p: dict, x: jnp.ndarray, chunk: int = 256) -> jnp.ndarray:
+    """Full-sequence Mamba-2 block. x: [B, L, d]."""
+    return _mamba2_fwd(p, x, chunk)[0]
+
+
+def mamba2_prefill(p: dict, x: jnp.ndarray, chunk: int = 256):
+    """Full-sequence forward that also returns the decode state."""
+    return _mamba2_fwd(p, x, chunk)
+
+
+def rms_norm_gated(y, z, w, eps: float = 1e-6):
+    y32 = y.astype(F32) * jax.nn.silu(z.astype(F32))
+    n = y32 * jax.lax.rsqrt(jnp.mean(y32 * y32, -1, keepdims=True) + eps)
+    return (n * w.astype(F32)).astype(y.dtype)
+
+
+def mamba2_decode(p: dict, x: jnp.ndarray, state):
+    """One-token step; state = (conv [B,K-1,conv_dim], h [B,nh,hd,st])."""
+    conv_st, h = state
+    di = p["out_proj"].shape[0]
+    nh = p["A_log"].shape[0]
+    hd = di // nh
+    st = (p["in_xbc"].shape[1] - di) // 2
+    z = x @ p["in_z"]
+    xbc = x @ p["in_xbc"]
+    dt_in = x @ p["in_dt"]
+    window = jnp.concatenate([conv_st, xbc], axis=1)
+    xc = jnp.einsum("bkc,kc->bc", window.astype(F32),
+                    p["conv_w"].astype(F32)) + p["conv_b"].astype(F32)
+    xc = jax.nn.silu(xc)
+    xin, Bm, Cm = jnp.split(xc, [di, di + st], axis=-1)        # [B, .]
+    dt = jax.nn.softplus(dt_in.astype(F32)[:, 0] + p["dt_bias"][None])  # [B,nh]
+    a = jnp.exp(-jnp.exp(p["A_log"])[None] * dt)               # [B,nh]
+    xh = (xin * dt.repeat(hd, axis=-1)).reshape(-1, nh, hd)
+    h_new = a[..., None, None] * h + xh[..., None] * Bm[:, None, None, :]
+    y = jnp.einsum("bhds,bs->bhd", h_new, Cm)
+    y = y + p["D"][None, :, None] * xin.reshape(-1, nh, hd)
+    y = y.reshape(x.shape[0], 1, di).astype(x.dtype)
+    y = rms_norm_gated(y, z, p["norm_w"])
+    return y @ p["out_proj"], (window[:, 1:], h_new)

@@ -1,0 +1,2 @@
+from . import checkpoint, elastic, fault
+from .fault import FaultTolerantLoop, Preemption, StragglerMonitor

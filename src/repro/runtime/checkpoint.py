@@ -1,0 +1,96 @@
+"""Sharded checkpoint save/restore — no orbax/tensorstore dependency.
+
+Layout:  <dir>/step_<N>/
+            manifest.msgpack     — treedef, shapes, dtypes, step, extras
+            arr_<i>.npy          — one file per leaf (host-local full value
+                                   in this single-process container; on a
+                                   multi-host deployment each host writes
+                                   its addressable shards with the same
+                                   manifest, keyed by process index)
+
+Checkpoints are **mesh-shape-agnostic**: leaves are stored with their
+global shapes; ``restore`` device_puts onto whatever shardings the caller
+provides, so restoring onto a different mesh (elastic resize) is just a
+different `shardings` argument (tested in tests/test_runtime.py).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _leaf_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return keys, leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None
+         ) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    keys, leaves, _ = _leaf_paths(tree)
+    meta = {"step": step, "keys": keys, "extra": extra or {},
+            "shapes": [], "dtypes": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        meta["shapes"].append(list(arr.shape))
+        meta["dtypes"].append(str(arr.dtype))
+        np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(meta))
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)                      # atomic publish
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of `tree_like`; `shardings` may be a
+    matching pytree of NamedShardings (or None for host-local arrays)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    keys, leaves, treedef = _leaf_paths(tree_like)
+    assert keys == meta["keys"], "checkpoint/model structure mismatch"
+    shard_leaves = (jax.tree.leaves(shardings,
+                                    is_leaf=lambda x: x is None)
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
+        arr = np.load(os.path.join(path, f"arr_{i}.npy"))
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), meta
+
+
+def read_extra(ckpt_dir: str, step: Optional[int] = None) -> Dict:
+    if step is None:
+        step = latest_step(ckpt_dir)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        return msgpack.unpackb(f.read())["extra"]

@@ -1,0 +1,59 @@
+"""Elastic re-meshing: choose a production mesh for whatever host set
+survives, and re-shard a checkpoint onto it.
+
+Policy (DESIGN.md §6): the model axis is sacred (TP extent fixed by the
+config's divisibility constraints); failures shrink the data/pod axes.
+Checkpoints store global shapes, so re-sharding is `device_put` with the
+new shardings — no resharding pass needed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    dropped_chips: int
+
+
+def plan_remesh(chips_alive: int, model_parallel: int = 16,
+                pods: Optional[int] = None) -> MeshPlan:
+    """Largest (pod?, data, model) mesh fitting the surviving chips.
+
+    data extent is the largest power of two such that
+    pods*data*model <= chips_alive (power-of-two keeps batch divisibility
+    with the standard global-batch choices).
+    """
+    if chips_alive < model_parallel:
+        raise ValueError(f"need >= {model_parallel} chips, have {chips_alive}")
+    if pods is not None and pods > 1:
+        per_pod = chips_alive // pods
+        data = 1
+        while pods * (data * 2) * model_parallel <= chips_alive and \
+                (data * 2) * model_parallel <= per_pod * model_parallel:
+            data *= 2
+        while pods * data * model_parallel > chips_alive:
+            data //= 2
+        if data < 1:
+            raise ValueError("not enough chips for requested pod count")
+        used = pods * data * model_parallel
+        return MeshPlan((pods, data, model_parallel), ("pod", "data", "model"),
+                        chips_alive - used)
+    data = 1
+    while (data * 2) * model_parallel <= chips_alive:
+        data *= 2
+    used = data * model_parallel
+    return MeshPlan((data, model_parallel), ("data", "model"),
+                    chips_alive - used)
+
+
+def build_mesh(plan: MeshPlan) -> jax.sharding.Mesh:
+    return jax.make_mesh(
+        plan.shape, plan.axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(plan.axes))

@@ -1,0 +1,45 @@
+"""Serving step factories: prefill (prompt -> caches + first logits) and
+single-token decode against the sharded caches.  Batched request serving
+drives these from examples/serve_lm.py; the dry-run lowers them for the
+decode_32k / long_500k cells."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+
+
+def make_prefill_step(cfg: ArchConfig, cache_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        logits, _, state = M.forward(cfg, params, batch, collect_state=True,
+                                     cache_len=cache_len)
+        return logits[:, -1:], state
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, state, batch, pos):
+        logits, state = M.decode_step(cfg, params, state, batch, pos)
+        return logits, state
+    return decode_step
+
+
+def greedy_decode(cfg: ArchConfig, params, state, first_token, start_pos: int,
+                  n_tokens: int):
+    """Host-side greedy loop used by the serving example."""
+    step = jax.jit(make_decode_step(cfg))
+    tok = first_token
+    out = []
+    for i in range(n_tokens):
+        logits, state = step(params, state, {"tokens": tok},
+                             jnp.int32(start_pos + i))
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        if cfg.frontend == "audio_stub":
+            tok = tok  # [B,1,nc] argmax already per codebook
+        out.append(tok)
+    return jnp.concatenate(out, axis=1), state

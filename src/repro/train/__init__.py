@@ -1,0 +1,3 @@
+from .data import DataConfig, DataPipeline, synthetic_batch
+from .optimizer import OptConfig, apply_updates, init_opt_state
+from .train_step import lm_loss, loss_fn, make_eval_step, make_train_step

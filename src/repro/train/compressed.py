@@ -1,0 +1,67 @@
+"""Cross-pod compressed training step: the production wiring of
+``repro.distributed.compression`` (int8 error-feedback gradient reduction
+on the pod axis only).
+
+Layout: params replicated across "pod" (sharded over "model"/"data" as
+usual — those axes stay GSPMD-auto inside the shard_map); each pod
+computes its gradient on its slice of the global batch in full precision;
+the POD-axis leg of the reduction is int8-EF-compressed (4x fewer
+cross-DCN bytes than an f32 ring all-reduce); residuals are carried per
+pod in the training state (shape [n_pods, ...] per leaf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed.compression import tree_psum_int8_ef
+from .optimizer import OptConfig, apply_updates
+from .train_step import loss_fn
+
+F32 = jnp.float32
+
+
+def init_pod_residuals(params, n_pods: int):
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_pods,) + p.shape, F32), params)
+
+
+def make_compressed_train_step(cfg: ArchConfig, opt_cfg: OptConfig,
+                               mesh: Mesh):
+    """(params, opt_state, residuals, batch) -> (params, opt, residuals,
+    metrics); batch's leading axis must divide by the pod extent."""
+    assert "pod" in mesh.axis_names, "compressed step needs a pod axis"
+    n_pods = int(mesh.shape["pod"])
+    grad_fn = jax.value_and_grad(functools.partial(loss_fn, cfg),
+                                 has_aux=True)
+
+    def per_pod(params, batch, residuals):
+        # params replicated over pod; batch pod-sharded (leading axis);
+        # residuals pod-local (leading axis 1 inside).
+        (loss, _), grads = grad_fn(params, batch)
+        res_local = jax.tree.map(lambda r: r[0], residuals)
+        gsum, new_res = tree_psum_int8_ef(grads, res_local, "pod")
+        gavg = jax.tree.map(lambda g: g / n_pods, gsum)
+        loss_avg = jax.lax.pmean(loss, "pod")
+        new_res = jax.tree.map(lambda r: r[None], new_res)
+        return loss_avg, gavg, new_res
+
+    smap = jax.shard_map(
+        per_pod, mesh=mesh, axis_names={"pod"},
+        in_specs=(P(), P("pod"), P("pod")),
+        out_specs=(P(), P(), P("pod")),
+        check_vma=False)
+
+    def train_step(params, opt_state, residuals, batch):
+        loss, grads, residuals = smap(params, batch, residuals)
+        params, opt_state, om = apply_updates(params, grads, opt_state,
+                                              opt_cfg)
+        return params, opt_state, residuals, {"loss": loss, **om}
+
+    return train_step

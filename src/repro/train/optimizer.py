@@ -1,0 +1,82 @@
+"""AdamW with configurable moment dtype.
+
+The 480B MoE config stores first/second moments in bf16 (DESIGN.md
+§Memory-fit) — update math still runs in f32 (moments are upcast, the
+new moments rounded back), so the quality cost is rounding, not range.
+No optax dependency: the whole optimizer is a pytree + two functions,
+which keeps checkpointing and ZeRO-style sharding trivial.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    warmup_steps: int = 100
+
+
+def init_opt_state(params, cfg: OptConfig) -> Dict[str, Any]:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _schedule(cfg: OptConfig, step) -> jnp.ndarray:
+    warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(F32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, opt_state, cfg: OptConfig
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = _schedule(cfg, opt_state["step"])
+    bc1 = 1.0 - cfg.b1 ** step.astype(F32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(F32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(F32) * scale
+        m32 = cfg.b1 * m.astype(F32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(F32) + (1 - cfg.b2) * g32 * g32
+        u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        if p.ndim >= 2:                       # decoupled wd on matrices only
+            u = u + cfg.weight_decay * p.astype(F32)
+        p_new = (p.astype(F32) - lr * u).astype(p.dtype)
+        return p_new, m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {"m": tdef.unflatten([o[1] for o in out]),
+                 "v": tdef.unflatten([o[2] for o in out]),
+                 "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,96 @@
+"""Core behaviour: BanditPAM tracks PAM's trajectory (Theorems 1-2 claims)."""
+import numpy as np
+import pytest
+
+from repro.core import BanditPAM, pam, total_loss, clara, clarans, voronoi_iteration
+from repro.core import datasets
+import jax.numpy as jnp
+
+
+@pytest.mark.parametrize("metric", ["l2", "l1", "cosine"])
+def test_banditpam_matches_pam_medoids(metric):
+    data = datasets.mnist_like(500, seed=7)
+    p = pam(data, k=3, metric=metric)
+    b = BanditPAM(k=3, metric=metric, seed=0).fit(data)
+    assert sorted(p.medoids) == sorted(b.medoids)
+    assert b.loss == pytest.approx(p.loss, rel=1e-5)
+
+
+@pytest.mark.parametrize("sampling", ["permutation", "replacement"])
+@pytest.mark.parametrize("baseline", ["none", "leader"])
+def test_modes_match_pam(sampling, baseline):
+    data = datasets.mnist_like(400, seed=3)
+    p = pam(data, k=4, metric="l2")
+    b = BanditPAM(k=4, metric="l2", seed=1, sampling=sampling,
+                  baseline=baseline).fit(data)
+    assert sorted(p.medoids) == sorted(b.medoids)
+
+
+def test_agreement_rate_across_seeds():
+    """Theorem 2: same medoids as PAM with probability 1 - o(1)."""
+    agree = 0
+    for s in range(8):
+        data = datasets.mnist_like(300, seed=20 + s)
+        p = pam(data, k=3, metric="l2")
+        b = BanditPAM(k=3, metric="l2", seed=s).fit(data)
+        agree += sorted(p.medoids) == sorted(b.medoids)
+    assert agree >= 7  # paper: "almost all cases"
+
+
+def test_loss_monotone_during_swaps():
+    data = datasets.mnist_like(600, seed=5)
+    b = BanditPAM(k=4, metric="l2", seed=0).fit(data)
+    losses = [h[2] for h in b.swap_history]
+    assert all(l2 < l1 for l1, l2 in zip(losses, losses[1:])) or len(losses) <= 1
+    assert b.converged
+
+
+def test_medoids_are_data_points_and_distinct():
+    data = datasets.scrna_like(300, seed=0)
+    b = BanditPAM(k=5, metric="l1", seed=0).fit(data)
+    assert len(set(b.medoids.tolist())) == 5
+    assert all(0 <= m < 300 for m in b.medoids)
+
+
+def test_eval_count_well_below_exhaustive_at_moderate_n():
+    n = 2000
+    data = datasets.mnist_like(n, seed=1)
+    b = BanditPAM(k=5, metric="l2", seed=0).fit(data)
+    iters = 5 + b.n_swaps + 1
+    # PAM/FastPAM1 pays >= n^2 per iteration; require a real reduction.
+    assert b.distance_evals / iters < 0.5 * n * n
+
+
+def test_baseline_variance_reduction_helps():
+    data = datasets.mnist_like(1500, seed=2)
+    b_raw = BanditPAM(k=5, metric="l2", seed=0, baseline="none").fit(data)
+    b_vr = BanditPAM(k=5, metric="l2", seed=0, baseline="leader").fit(data)
+    assert sorted(b_raw.medoids) == sorted(b_vr.medoids)
+    assert b_vr.distance_evals < b_raw.distance_evals
+
+
+def test_quality_vs_fast_baselines():
+    """Fig 1a: BanditPAM (== PAM) loss should be <= baseline algorithms."""
+    data = datasets.mnist_like(400, seed=11)
+    b = BanditPAM(k=5, metric="l2", seed=0).fit(data)
+    v = voronoi_iteration(data, k=5, metric="l2", seed=0)
+    c = clarans(data, k=5, metric="l2", seed=0, max_neighbors=100)
+    cl = clara(data, k=5, metric="l2", seed=0)
+    assert b.loss <= v.loss * 1.001
+    assert b.loss <= c.loss * 1.001
+    assert b.loss <= cl.loss * 1.001
+
+
+def test_arbitrary_dissimilarity_registry():
+    """k-medoids supports arbitrary (even asymmetric) dissimilarities."""
+    from repro.core import register_metric
+
+    def asym(x, y):
+        d = jnp.abs(x[:, None, :] - y[None, :, :]).sum(-1)
+        return d + 0.1 * (x.sum(-1)[:, None] - y.sum(-1)[None, :])
+
+    register_metric("asym_test", asym)
+    data = datasets.hoc4_like(200, seed=0)
+    p = pam(data, k=2, metric="asym_test")
+    b = BanditPAM(k=2, metric="asym_test", seed=0).fit(data)
+    assert sorted(p.medoids) == sorted(b.medoids)

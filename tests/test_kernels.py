@@ -1,0 +1,129 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose vs ref.py
+oracles (kernels run in interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+METRICS = ["l2", "l2sq", "l1", "cosine"]
+SHAPES = [(7, 5, 3), (128, 128, 128), (130, 100, 17), (256, 100, 784),
+          (64, 300, 129)]  # (m, r, d) incl. unaligned + paper-like dims
+
+
+def _data(m, r, d, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, d)).astype(dtype)
+    y = rng.standard_normal((r, d)).astype(dtype)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_pairwise_kernel_matches_ref(metric, shape):
+    m, r, d = shape
+    x, y = _data(m, r, d)
+    got = ops.pairwise_distance(x, y, metric, interpret=True)
+    want = ref.pairwise_ref(x, y, metric)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_kernel_dtypes(dtype):
+    x, y = _data(64, 64, 64)
+    got = ops.pairwise_distance(x.astype(dtype), y.astype(dtype), "l2sq",
+                                interpret=True)
+    want = ref.pairwise_ref(x.astype(dtype).astype(jnp.float32),
+                            y.astype(dtype).astype(jnp.float32), "l2sq")
+    assert got.dtype == jnp.float32  # f32 accumulation regardless of input
+    tol = 1e-1 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("m,b,d", [(64, 100, 32), (300, 100, 784), (128, 37, 50)])
+def test_build_g_kernel_matches_ref(metric, m, b, d):
+    x, y = _data(m, b, d, seed=1)
+    rng = np.random.default_rng(2)
+    dnear = jnp.asarray(
+        np.where(rng.uniform(size=b) < 0.2, np.inf,
+                 rng.uniform(0.5, 3.0, size=b)).astype(np.float32))
+    w = jnp.asarray((rng.uniform(size=b) < 0.9).astype(np.float32))
+    lead_g_full, _ = ref.build_g_ref(x, y, dnear, w, metric)  # [m]
+    lead = 3
+    # leader row of g values (w-masked), as the driver would provide
+    dl = ref.pairwise_ref(x[lead:lead + 1], y, metric)[0]
+    gl = jnp.where(jnp.isinf(dnear), dl, jnp.minimum(dl - dnear, 0.0)) * w
+    sums, sq, cross = ops.build_g_stats(x, y, dnear, w, gl, metric=metric,
+                                        interpret=True)
+    want_sums, want_sq = ref.build_g_ref(x, y, dnear, w, metric)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(want_sums),
+                               rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(want_sq),
+                               rtol=2e-4, atol=5e-3)
+    # cross vs dense oracle
+    dxy = ref.pairwise_ref(x, y, metric)
+    g = jnp.where(jnp.isinf(dnear)[None, :], dxy,
+                  jnp.minimum(dxy - dnear[None, :], 0.0)) * w[None, :]
+    np.testing.assert_allclose(np.asarray(cross), np.asarray(g @ gl),
+                               rtol=2e-4, atol=5e-3)
+
+
+@pytest.mark.parametrize("metric", ["l2", "l1"])
+@pytest.mark.parametrize("m,b,d,k", [(64, 100, 32, 3), (200, 100, 784, 5),
+                                     (128, 64, 20, 10)])
+def test_swap_g_kernel_matches_ref(metric, m, b, d, k):
+    x, y = _data(m, b, d, seed=3)
+    rng = np.random.default_rng(4)
+    d1 = jnp.asarray(rng.uniform(0.1, 2.0, size=b).astype(np.float32))
+    d2 = jnp.asarray((np.asarray(d1) + rng.uniform(0.1, 2.0, size=b)).astype(np.float32))
+    assign = jnp.asarray(rng.integers(0, k, size=b).astype(np.int32))
+    w = jnp.asarray((rng.uniform(size=b) < 0.9).astype(np.float32))
+    sums, sq, cross = ops.swap_g_stats(x, y, d1, d2, assign, w, k,
+                                       metric=metric, interpret=True)
+    want_sums, want_sq = ref.swap_g_ref(x, y, d1, d2, assign, w, k, metric)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(want_sums),
+                               rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(want_sq),
+                               rtol=2e-4, atol=5e-3)
+
+
+def test_swap_g_cross_term():
+    m, b, d, k = 64, 100, 16, 4
+    x, y = _data(m, b, d, seed=5)
+    rng = np.random.default_rng(6)
+    d1 = jnp.asarray(rng.uniform(0.1, 2.0, size=b).astype(np.float32))
+    d2 = jnp.asarray((np.asarray(d1) + rng.uniform(0.1, 2.0, size=b)).astype(np.float32))
+    assign = jnp.asarray(rng.integers(0, k, size=b).astype(np.int32))
+    w = jnp.ones((b,), jnp.float32)
+    # leader = arm (m_l=1, x_l=7)
+    dxy = ref.pairwise_ref(x, y, "l2")
+    in_c1 = assign == 1
+    gl = jnp.where(in_c1, -d1 + jnp.minimum(d2, dxy[7]),
+                   -d1 + jnp.minimum(d1, dxy[7]))
+    _, _, cross = ops.swap_g_stats(x, y, d1, d2, assign, w, k, lead_g=gl,
+                                   metric="l2", interpret=True)
+    # dense oracle
+    in_cm = np.asarray(assign)[None, :] == np.arange(k)[:, None]
+    g = np.where(in_cm[:, None, :],
+                 np.asarray(-d1)[None, None, :] + np.minimum(np.asarray(d2)[None, None, :], np.asarray(dxy)[None]),
+                 np.asarray(-d1)[None, None, :] + np.minimum(np.asarray(d1)[None, None, :], np.asarray(dxy)[None]))
+    want = (g * np.asarray(gl)[None, None, :]).sum(-1)
+    np.testing.assert_allclose(np.asarray(cross), want, rtol=2e-4, atol=5e-3)
+
+
+def test_install_reroutes_core_metrics():
+    from repro.core import distances
+    orig = distances.get_metric("l2sq")
+    try:
+        ops.install(("l2sq",))
+        x, y = _data(32, 16, 8)
+        got = distances.get_metric("l2sq")(x, y)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.pairwise_ref(x, y, "l2sq")),
+                                   rtol=1e-4, atol=1e-4)
+    finally:
+        distances.register_metric("l2sq", orig)

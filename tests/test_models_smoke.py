@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family config,
+one forward + one train step on CPU, asserting shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced, SHAPES
+from repro.models import model as M
+from repro.train import OptConfig, init_opt_state, make_train_step, synthetic_batch
+
+B, L = 2, 32
+
+
+def _batch(cfg, b=B, l=L):
+    return synthetic_batch(cfg, b, l, step=0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_reduced(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    batch = _batch(cfg)
+    logits, aux = M.forward(cfg, params, batch)
+    want_v = cfg.vocab
+    assert logits.shape[0] == B and logits.shape[1] == L
+    assert logits.shape[-1] == want_v
+    assert bool(jnp.isfinite(logits).all()), f"{arch} logits not finite"
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_runs_and_updates(arch):
+    cfg = get_reduced(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    ocfg = OptConfig(lr=1e-3, warmup_steps=2)
+    opt = init_opt_state(params, ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg, microbatches=2))
+    new_params, new_opt, metrics = step(params, opt, _batch(cfg))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually moved
+    moved = jax.tree.reduce(
+        lambda acc, x: acc or bool(x),
+        jax.tree.map(lambda a, b: bool(jnp.any(a != b)), params, new_params),
+        False)
+    assert moved, f"{arch}: no parameter changed"
+    assert int(new_opt["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_finite(arch):
+    cfg = get_reduced(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    state = M.init_decode_state(cfg, B, 64, dtype=jnp.float32)
+    if cfg.frontend == "audio_stub":
+        tok = {"tokens": jnp.zeros((B, 1, cfg.n_codebooks), jnp.int32)}
+    else:
+        tok = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    logits, state2 = M.decode_step(cfg, params, state, tok, jnp.int32(0))
+    assert bool(jnp.isfinite(logits).all())
+    # caches updated in place structure
+    assert jax.tree.structure(state) == jax.tree.structure(state2)
+
+
+def test_full_configs_have_exact_assignment_numbers():
+    spec = {
+        "falcon_mamba_7b": dict(n_layers=64, d_model=4096, vocab=65024, ssm_state=16),
+        "arctic_480b": dict(n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+                            d_ff=4864, vocab=32000, n_experts=128, top_k=2),
+        "llama4_scout_17b": dict(n_layers=48, d_model=5120, n_heads=40,
+                                 n_kv_heads=8, d_ff=8192, vocab=202048,
+                                 n_experts=16, top_k=1),
+        "gemma3_12b": dict(n_layers=48, d_model=3840, n_heads=16, n_kv_heads=8,
+                           d_ff=15360, vocab=262144),
+        "mistral_nemo_12b": dict(n_layers=40, d_model=5120, n_heads=32,
+                                 n_kv_heads=8, d_ff=14336, vocab=131072),
+        "granite_8b": dict(n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+                           d_ff=14336, vocab=49152),
+        "qwen3_1_7b": dict(n_layers=28, d_model=2048, n_heads=16, n_kv_heads=8,
+                           d_ff=6144, vocab=151936, qk_norm=True),
+        "phi3_vision_4_2b": dict(n_layers=32, d_model=3072, n_heads=32,
+                                 n_kv_heads=32, d_ff=8192, vocab=32064),
+        "zamba2_2_7b": dict(n_layers=54, d_model=2560, n_heads=32,
+                            n_kv_heads=32, vocab=32000, ssm_state=64),
+        "musicgen_large": dict(n_layers=48, d_model=2048, n_heads=32,
+                               n_kv_heads=32, d_ff=8192, vocab=2048),
+    }
+    for arch, fields in spec.items():
+        cfg = get_config(arch)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+
+
+def test_shape_cells_defined():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524288
+
+
+def test_param_counts_sane():
+    # total params should be within ~25% of the advertised sizes
+    approx = {"falcon_mamba_7b": 7e9, "gemma3_12b": 12e9,
+              "mistral_nemo_12b": 12e9, "granite_8b": 8e9,
+              "qwen3_1_7b": 1.7e9, "zamba2_2_7b": 2.7e9,
+              "arctic_480b": 480e9}
+    for arch, want in approx.items():
+        got = get_config(arch).param_count()["total"]
+        assert 0.6 * want < got < 1.6 * want, f"{arch}: {got/1e9:.1f}B vs {want/1e9}B"

@@ -1,0 +1,111 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.adaptive import adaptive_search
+from repro.core.banditpam import _swap_batch_stats, _swap_terms, medoid_cache
+from repro.core.distances import get_metric
+
+
+def _mk_stats(values):
+    """values: [arms, n_ref] ground-truth g table -> streaming stats_fn."""
+    v = jnp.asarray(values)
+
+    def stats_fn(ref_idx, w, lead, rnd):
+        g = v[:, ref_idx] * w[None, :]
+        return g.sum(1), (g * g).sum(1), g @ g[lead]
+
+    def exact_fn():
+        return v.mean(1)
+
+    return stats_fn, exact_fn
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_arms=st.integers(3, 40),
+    n_ref=st.integers(5, 200),
+    seed=st.integers(0, 10_000),
+    sampling=st.sampled_from(["permutation", "replacement"]),
+    baseline=st.sampled_from(["none", "leader"]),
+)
+def test_adaptive_search_finds_separated_best(n_arms, n_ref, seed, sampling, baseline):
+    """With a clearly separated best arm, Algorithm 1 must return it."""
+    rng = np.random.default_rng(seed)
+    mu = rng.uniform(1.0, 2.0, size=n_arms)
+    best = rng.integers(n_arms)
+    mu[best] = 0.0  # separation >> within-arm spread below
+    values = mu[:, None] + 0.05 * rng.standard_normal((n_arms, n_ref))
+    stats_fn, exact_fn = _mk_stats(values.astype(np.float32))
+    res = adaptive_search(jax.random.PRNGKey(seed), stats_fn=stats_fn,
+                          exact_fn=exact_fn, n_arms=n_arms, n_ref=n_ref,
+                          batch_size=16, sampling=sampling, baseline=baseline)
+    assert int(res.best) == best
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_arms=st.integers(2, 30), n_ref=st.integers(4, 128),
+       seed=st.integers(0, 10_000))
+def test_permutation_mode_is_exact_at_full_budget(n_arms, n_ref, seed):
+    """Sampling without replacement ⇒ winner == exact argmin, always
+    (not just w.h.p.), because the final running mean is the exact mean."""
+    rng = np.random.default_rng(seed)
+    values = rng.standard_normal((n_arms, n_ref)).astype(np.float32)
+    stats_fn, exact_fn = _mk_stats(values)
+    res = adaptive_search(jax.random.PRNGKey(seed), stats_fn=stats_fn,
+                          exact_fn=exact_fn, n_arms=n_arms, n_ref=n_ref,
+                          batch_size=8, sampling="permutation")
+    assert int(res.best) == int(np.argmin(values.mean(1)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(8, 60), k=st.integers(2, 5), b=st.integers(3, 16),
+       seed=st.integers(0, 1000))
+def test_swap_stats_identity_vs_dense(n, k, b, seed):
+    """The FastPAM1 fused sums must equal the dense Eq. 12 evaluation."""
+    rng = np.random.default_rng(seed)
+    d = rng.uniform(0.1, 3.0, size=(n, 8)).astype(np.float32)
+    data = jnp.asarray(d)
+    med = jnp.asarray(rng.choice(n, size=k, replace=False).astype(np.int32))
+    d1, d2, assign = medoid_cache(data, med, metric="l2")
+    ref_idx = jnp.asarray(rng.integers(0, n, size=b).astype(np.int32))
+    w = jnp.ones((b,), jnp.float32)
+    dxy = get_metric("l2")(data, data[ref_idx])
+    sums, sqsums = _swap_batch_stats(dxy, d1[ref_idx], d2[ref_idx],
+                                     assign[ref_idx], w, k)
+    # dense oracle: g[m, x, y] per Eq. 12
+    d1b = np.asarray(d1)[np.asarray(ref_idx)]
+    d2b = np.asarray(d2)[np.asarray(ref_idx)]
+    ab = np.asarray(assign)[np.asarray(ref_idx)]
+    dxy_np = np.asarray(dxy)
+    g = np.empty((k, n, b), np.float32)
+    for m in range(k):
+        in_cm = ab == m
+        g[m] = np.where(in_cm[None, :],
+                        -d1b[None, :] + np.minimum(d2b[None, :], dxy_np),
+                        -d1b[None, :] + np.minimum(d1b[None, :], dxy_np))
+    np.testing.assert_allclose(np.asarray(sums).reshape(k, n), g.sum(-1),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sqsums).reshape(k, n), (g * g).sum(-1),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(5, 50), d=st.integers(1, 20), seed=st.integers(0, 1000),
+       metric=st.sampled_from(["l2", "l2sq", "l1", "cosine"]))
+def test_distance_properties(n, d, seed, metric):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    if metric == "cosine":   # cosine is undefined at ~zero vectors
+        x /= np.maximum(np.linalg.norm(x, axis=1, keepdims=True), 1e-3)
+    x = jnp.asarray(x)
+    dm = np.asarray(get_metric(metric)(x, x))
+    assert dm.shape == (n, n)
+    # l2's matmul form loses ~1e-5 absolute in f32 cancellation; sqrt
+    # amplifies that to ~3e-3 near zero.
+    atol = 5e-3 if metric == "l2" else 1e-3
+    np.testing.assert_allclose(np.diag(dm), 0.0, atol=atol)
+    np.testing.assert_allclose(dm, dm.T, atol=atol)   # these metrics are symmetric
+    assert (dm > -1e-4).all()
