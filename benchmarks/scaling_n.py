@@ -28,6 +28,10 @@ def _modes(n: int):
         #  dominates at small n — see EXPERIMENTS §Perf track 3 iter 4)
         "optimized": dict(sampling="permutation", baseline="leader",
                           cache_cols=min(1000, n // 4)),
+        # + BanditPAM++ SWAP reuse: lazily-grown PIC distance cache and
+        # carried per-arm statistics across swap iterations (reuse axis)
+        "optimized_pic": dict(sampling="permutation", baseline="leader",
+                              reuse="pic"),
     }
 
 
@@ -35,7 +39,7 @@ def run():
     sizes = [1000, 2000, 4000, 6000] if FULL else [500, 1000, 2000]
     out = {}
     for name, ds, metric, k in CASES:
-        for mode in ("paper", "optimized"):
+        for mode in ("paper", "optimized", "optimized_pic"):
             evs, walls = [], []
             for n in sizes:
                 kw = _modes(n)[mode]
@@ -46,7 +50,9 @@ def run():
                 evs.append(b.distance_evals / iters)
                 walls.append(wall / iters)
                 emit(f"{name}_{mode}_n{n}", wall * 1e6,
-                     f"evals_per_iter={evs[-1]:.0f};n2={n*n};swaps={b.n_swaps}")
+                     f"evals_per_iter={evs[-1]:.0f};n2={n*n};swaps={b.n_swaps};"
+                     f"swap_fresh={b.evals_by_phase.get('swap', 0)};"
+                     f"swap_cached={b.evals_by_phase.get('swap_cached', 0)}")
             slope = loglog_slope(sizes, evs)
             red = (sizes[-1] ** 2) / evs[-1]
             emit(f"{name}_{mode}_slope", float(np.mean(walls)) * 1e6,

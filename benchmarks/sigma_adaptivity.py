@@ -90,10 +90,32 @@ def fixed_vs_adaptive_sigma(n=2000, k=5, seed=0):
     return per_arm, pooled
 
 
+def swap_reuse_ablation(n=1500, k=5, seed=0):
+    """Reuse-on/off axis: SWAP-phase fresh vs cached distance evaluations
+    with the BanditPAM++ PIC engine enabled/disabled.  With reuse the σ/CI
+    machinery starts each swap iteration from the carried moments, so later
+    iterations typically resolve without sampling at all."""
+    from repro.core import BanditPAM
+    data = datasets.mnist_like(n, seed=seed)
+    rows = {}
+    for reuse in ("none", "pic"):
+        b = BanditPAM(k, "l2", seed=seed, reuse=reuse).fit(data)
+        fresh = b.evals_by_phase.get("swap", 0)
+        cached = b.evals_by_phase.get("swap_cached", 0)
+        rows[reuse] = (fresh, cached, b.n_swaps)
+        emit(f"appfig1_swap_reuse_{reuse}", 0.0,
+             f"swap_fresh={fresh};swap_cached={cached};swaps={b.n_swaps}")
+    f_none, f_pic = rows["none"][0], max(rows["pic"][0], 1)
+    emit("appfig1_swap_reuse_ratio", 0.0,
+         f"fresh_none_over_pic={f_none / f_pic:.1f}x")
+    return rows
+
+
 def run():
     n = 4000 if FULL else 1500
     sigma_distribution(n=n)
     fixed_vs_adaptive_sigma(n=n)
+    swap_reuse_ablation(n=n)
 
 
 if __name__ == "__main__":

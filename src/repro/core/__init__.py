@@ -4,12 +4,12 @@ from .adaptive import SearchResult, adaptive_search
 from .banditpam import BanditPAM, FitResult, medoid_cache, total_loss
 from .distances import available_metrics, get_metric, pairwise, register_metric
 from .pam import PAMResult, pam
-from .baselines import clara, clarans, voronoi_iteration
+from .baselines import clara, clarans, fasterpam, voronoi_iteration
 from . import datasets
 
 __all__ = [
     "SearchResult", "adaptive_search", "BanditPAM", "FitResult",
     "medoid_cache", "total_loss", "available_metrics", "get_metric",
     "pairwise", "register_metric", "PAMResult", "pam", "clara", "clarans",
-    "voronoi_iteration", "datasets",
+    "fasterpam", "voronoi_iteration", "datasets",
 ]

@@ -39,6 +39,15 @@ sequences for quantities whose argmin is the same arm, so the union-bound
 correctness argument of Theorem 1 carries through (with 2δ in place of δ).
 Final selection still uses the raw running means (exact at full budget in
 permutation mode), so the returned arm matches PAM's argmin exactly.
+
+BanditPAM++ reuse (``init_sums`` / ``init_sqsums`` / ``init_rounds``): in
+permutation mode over a FIXED shared permutation, the per-arm moments
+accumulated over a prefix of the reference stream are *permutation-invariant
+cacheable* — a later call whose arms' ``g`` returns are unchanged (or whose
+caller has delta-corrected the moments for the arms that did change) may
+seed the search with them and resume mid-stream, paying zero evaluations
+for the carried prefix.  See ``repro.core.banditpam`` for the SWAP-phase
+driver that exploits this across swap iterations.
 """
 
 from __future__ import annotations
@@ -56,15 +65,19 @@ SIGMA_FLOOR = 1e-8
 class SearchResult(NamedTuple):
     best: jnp.ndarray        # int32 index into the (flattened) arm set
     mu_best: jnp.ndarray     # estimated/exact objective of the winner
-    n_evals: jnp.ndarray     # uint32: algorithmic distance evaluations
-    rounds: jnp.ndarray      # int32: bandit rounds executed
+    n_evals: jnp.ndarray     # uint32: fresh algorithmic distance evaluations
+    rounds: jnp.ndarray      # int32: bandit rounds executed (absolute, incl. carried)
     used_exact: jnp.ndarray  # bool: fell through to exact computation
     n_survivors: jnp.ndarray # int32: surviving arms at loop exit
+    n_evals_cached: jnp.ndarray  # uint32: evaluations served from a cache
+    sums: jnp.ndarray        # [arms] final Σ g over the consumed prefix
+    sqsums: jnp.ndarray      # [arms] final Σ g² over the consumed prefix
 
 
 class _State(NamedTuple):
     key: jax.Array
-    sums: jnp.ndarray        # [arms] Σ g (from round 1)
+    sums: jnp.ndarray        # [arms] Σ g (from round 1, incl. carried seed)
+    sqsums: jnp.ndarray      # [arms] Σ g² (carried across calls for PIC reuse)
     sigma: jnp.ndarray       # [arms] per-arm sub-Gaussian scale (Eq. 11)
     active: jnp.ndarray      # [arms] bool survivor mask
     n_used: jnp.ndarray      # int32 reference points consumed so far
@@ -73,7 +86,8 @@ class _State(NamedTuple):
     d_sq: jnp.ndarray        # [arms] Σ (g_x - g_lead)² post-pilot
     sigma_d: jnp.ndarray     # [arms] differenced sub-Gaussian scale
     n_post: jnp.ndarray      # int32 post-pilot samples
-    n_evals: jnp.ndarray     # uint32 distance evaluations
+    n_evals: jnp.ndarray     # uint32 fresh distance evaluations
+    n_cached: jnp.ndarray    # uint32 cache-served distance evaluations
     rounds: jnp.ndarray
 
 
@@ -102,7 +116,10 @@ def adaptive_search(
     baseline: str = "none",
     stop_when_positive: bool = False,
     perm: Optional[jnp.ndarray] = None,
-    free_rounds: int = 0,
+    free_rounds=0,
+    init_sums: Optional[jnp.ndarray] = None,
+    init_sqsums: Optional[jnp.ndarray] = None,
+    init_rounds=0,
 ) -> SearchResult:
     """Run one best-arm identification (one BUILD assignment or one SWAP pick).
 
@@ -114,8 +131,21 @@ def adaptive_search(
         is the round index, letting the caller serve cached distance
         columns for warm rounds).
       perm / free_rounds: paper App 2.2 cache — reuse a FIXED reference
-        permutation across calls; the first ``free_rounds`` rounds hit the
-        caller's distance cache and cost zero *new* evaluations.
+        permutation across calls; the first ``free_rounds`` rounds (a Python
+        int or a traced int32 scalar) hit the caller's distance cache and
+        cost zero *new* evaluations (they are tallied in ``n_evals_cached``
+        instead).
+      init_sums / init_sqsums / init_rounds: BanditPAM++ permutation-
+        invariant caching (PIC).  Seed the search with per-arm Σg / Σg²
+        already accumulated over the first ``init_rounds`` batches of the
+        SAME fixed ``perm`` by a previous call (the caller must have
+        re-validated them against the current g — see
+        ``banditpam._carry_delta``).  The loop resumes at round
+        ``init_rounds`` with ``n_used = min(init_rounds·B, n_ref)``; per-arm
+        σ is re-derived from the carried moments (a strictly better estimate
+        than the paper's first-batch Eq. 11, with the same union-bound
+        validity since σ is treated as a known scale).  Requires
+        ``sampling="permutation"`` and an explicit ``perm``.
       exact_fn: ``() -> mu[n_arms]`` exact objective; only used by the
         ``"replacement"`` fallback.
       count_fn: distance evaluations *per reference point* as a function of
@@ -126,6 +156,9 @@ def adaptive_search(
         raise ValueError(f"unknown sampling mode {sampling!r}")
     if baseline not in ("none", "leader"):
         raise ValueError(f"unknown baseline mode {baseline!r}")
+    if init_sums is not None and (sampling != "permutation" or perm is None):
+        raise ValueError("carried statistics require permutation sampling "
+                         "over an explicit fixed perm (PIC invariant)")
     if delta is None:
         delta = 1.0 / (1000.0 * n_arms)
     if count_fn is None:
@@ -180,6 +213,7 @@ def adaptive_search(
 
         # ---- raw statistics (paper) ----
         sums = s.sums + sums_b
+        sqsums = s.sqsums + sq_b
         n_new = s.n_used + b_eff
         n_new_f = n_new.astype(jnp.float32)
         mu_hat = sums / n_new_f
@@ -222,18 +256,36 @@ def adaptive_search(
 
         active = jnp.logical_and(s.active, jnp.logical_not(kill))
         fresh = (s.rounds >= free_rounds).astype(jnp.uint32)
-        n_evals = s.n_evals + fresh * count_fn(s.active) * b_eff.astype(jnp.uint32)
-        return _State(key, sums, sigma, active, n_new, lead,
-                      d_sums, d_sq, sigma_d, n_post, n_evals, s.rounds + 1)
+        cost = count_fn(s.active) * b_eff.astype(jnp.uint32)
+        n_evals = s.n_evals + fresh * cost
+        n_cached = s.n_cached + (1 - fresh) * cost
+        return _State(key, sums, sqsums, sigma, active, n_new, lead,
+                      d_sums, d_sq, sigma_d, n_post, n_evals, n_cached,
+                      s.rounds + 1)
 
     zeros = jnp.zeros((n_arms,), jnp.float32)
+    if init_sums is not None:
+        # PIC seed: resume from the carried permutation prefix.  σ comes
+        # from the carried moments (all arms share the same sample count).
+        rounds0 = jnp.asarray(init_rounds, jnp.int32)
+        n_used0 = jnp.minimum(rounds0 * B, n_ref).astype(jnp.int32)
+        n0_f = jnp.maximum(n_used0.astype(jnp.float32), 1.0)
+        mu0 = init_sums / n0_f
+        var0 = jnp.maximum(init_sqsums / n0_f - mu0 * mu0, 0.0)
+        sums0, sqsums0 = init_sums, init_sqsums
+        sigma0 = jnp.sqrt(var0) + SIGMA_FLOOR
+    else:
+        rounds0 = jnp.int32(0)
+        n_used0 = jnp.int32(0)
+        sums0, sqsums0 = zeros, zeros
+        sigma0 = jnp.full((n_arms,), jnp.inf, jnp.float32)
     init = _State(
-        key=key, sums=zeros,
-        sigma=jnp.full((n_arms,), jnp.inf, jnp.float32),
-        active=active0, n_used=jnp.int32(0), lead=jnp.int32(-1),
+        key=key, sums=sums0, sqsums=sqsums0, sigma=sigma0,
+        active=active0, n_used=n_used0, lead=jnp.int32(-1),
         d_sums=zeros, d_sq=zeros,
         sigma_d=jnp.full((n_arms,), jnp.inf, jnp.float32),
-        n_post=jnp.int32(0), n_evals=jnp.uint32(0), rounds=jnp.int32(0),
+        n_post=jnp.int32(0), n_evals=jnp.uint32(0), n_cached=jnp.uint32(0),
+        rounds=rounds0,
     )
     final = jax.lax.while_loop(cond, body, init)
 
@@ -262,4 +314,6 @@ def adaptive_search(
 
     return SearchResult(best=best, mu_best=mu_best, n_evals=n_evals,
                         rounds=final.rounds, used_exact=used_exact,
-                        n_survivors=n_survivors)
+                        n_survivors=n_survivors,
+                        n_evals_cached=final.n_cached,
+                        sums=final.sums, sqsums=final.sqsums)

@@ -26,6 +26,24 @@ each bandit round pays ``#active-arms × B`` in BUILD and
 ``#distinct-active-candidates × B`` in SWAP (FastPAM1 sharing), cache
 (re)computation pays ``n·k``, and the d_near update after each BUILD
 assignment pays ``n`` — exactly the ledger of the reference implementation.
+
+Beyond the paper, ``BanditPAM(reuse="pic")`` enables the BanditPAM++
+(Tiwari et al. 2023) SWAP-phase reuse engine:
+
+* **PIC** — every search samples the SAME fixed reference permutation, and
+  the distance columns it consumes are materialised once into a lazily
+  grown cache (``_PicCache``); later searches replay those rounds for free.
+* **Virtual arms** — per-arm Σg / Σg² from swap iteration *t* are carried
+  into iteration *t+1* and repaired only where the accepted swap moved a
+  reference point's (d1, d2, assign); per changed point that touches the
+  shared base term plus at most the point's old and new cluster rows
+  (``_carry_delta``).  A search seeded this way usually resolves its argmin
+  from the carried exact prefix without sampling at all.
+
+Under ``reuse="pic"`` the ledger splits into fresh vs cached: fresh pays
+``n`` per newly materialised cache column (plus the ``n·k`` cache/loss
+terms), cached tallies carried-prefix replays, warm rounds and delta
+repairs.  ``reuse="none"`` reproduces the original ledger exactly.
 """
 
 from __future__ import annotations
@@ -87,12 +105,12 @@ def _build_g(dxy: jnp.ndarray, dnear_b: jnp.ndarray) -> jnp.ndarray:
 
 @functools.partial(jax.jit,
                    static_argnames=("metric", "batch_size", "delta", "sampling",
-                                    "baseline", "free_rounds"))
+                                    "baseline"))
 def _build_search(data: jnp.ndarray, dnear: jnp.ndarray, med_mask: jnp.ndarray,
                   key: jax.Array, *, metric: str, batch_size: int,
                   delta: float, sampling: str = "permutation",
                   baseline: str = "none", perm=None, dwarm=None,
-                  free_rounds: int = 0) -> SearchResult:
+                  free_rounds=0) -> SearchResult:
     n = data.shape[0]
     dist = get_metric(metric)
 
@@ -171,14 +189,14 @@ def _swap_batch_stats(dxy, d1_b, d2_b, a_b, w, k, lead=None):
 
 @functools.partial(jax.jit,
                    static_argnames=("metric", "batch_size", "delta", "k",
-                                    "sampling", "baseline", "early_stop",
-                                    "free_rounds"))
+                                    "sampling", "baseline", "early_stop"))
 def _swap_search(data: jnp.ndarray, d1: jnp.ndarray, d2: jnp.ndarray,
                  assign: jnp.ndarray, med_mask: jnp.ndarray, key: jax.Array,
                  *, metric: str, batch_size: int, delta: float, k: int,
                  sampling: str = "permutation", baseline: str = "none",
                  early_stop: bool = False, perm=None, dwarm=None,
-                 free_rounds: int = 0) -> SearchResult:
+                 free_rounds=0, init_sums=None, init_sqsums=None,
+                 init_rounds=0) -> SearchResult:
     n = data.shape[0]
     dist = get_metric(metric)
 
@@ -220,7 +238,132 @@ def _swap_search(data: jnp.ndarray, d1: jnp.ndarray, d2: jnp.ndarray,
                            delta=delta, active_init=active0, count_fn=count_fn,
                            sampling=sampling, baseline=baseline,
                            stop_when_positive=early_stop, perm=perm,
-                           free_rounds=free_rounds)
+                           free_rounds=free_rounds, init_sums=init_sums,
+                           init_sqsums=init_sqsums, init_rounds=init_rounds)
+
+
+# ---------------------------------------------------------------------------
+# BanditPAM++ SWAP-phase reuse engine (virtual arms + PIC)
+# ---------------------------------------------------------------------------
+
+class _PicCache:
+    """Permutation-invariant cache (BanditPAM++, Tiwari et al. 2023).
+
+    One FIXED random permutation of the reference set is shared by every
+    BUILD/SWAP search of a fit, and the distance columns ``d(·, perm[j])``
+    consumed by any search are materialised once and kept.  Rounds below
+    the high-water mark are then served to ``adaptive_search`` as *cached*
+    rounds (zero fresh evaluations) by every later search — valid because
+    the columns depend only on the data and the permutation, never on the
+    evolving medoid set.
+
+    The cache grows lazily in whole bandit rounds (unlike the upfront
+    ``cache_cols`` warm block, nothing is paid for rounds no search ever
+    reaches).  ``view()`` pads the width to a ``PAD_ROUNDS`` multiple so
+    jit re-traces at most every ``PAD_ROUNDS`` growth steps.
+    """
+
+    PAD_ROUNDS = 8
+
+    def __init__(self, data: jnp.ndarray, perm: jnp.ndarray, batch_size: int,
+                 metric: str):
+        self.data = data
+        self.metric = metric
+        self.B = int(batch_size)
+        n = int(data.shape[0])
+        self.n = n
+        self.n_rounds_max = -(-n // self.B)
+        total = self.n_rounds_max * self.B
+        perm_np = np.asarray(perm).astype(np.int32)
+        # Same tiling as adaptive_search: positions >= n are w=0 padding.
+        self.perm = jnp.asarray(perm_np)
+        self.perm_idx = jnp.asarray(np.tile(perm_np, -(-total // n))[:total])
+        self.perm_w = jnp.asarray((np.arange(total) < n).astype(np.float32))
+        self.hw_rounds = 0
+        self._cols = np.zeros((n, 0), np.float32)
+        self._view = None      # memoised device array
+        self._view_hw = 0      # rounds materialised into _view
+
+    def ensure(self, rounds: int) -> int:
+        """Materialise columns for rounds ``[hw, rounds)``; returns the fresh
+        distance evaluations paid (n per new effective reference position —
+        a full column, which is what makes the position free for *every* arm
+        of every later search).
+
+        Note the ledger counts these evaluations once, but on this jit'd
+        driver the wall-clock compute for a newly reached round is ~2×: the
+        search already computed the column inside ``stats_fn`` and cannot
+        write it out of the ``while_loop``, so materialisation recomputes
+        it here.  A TPU deployment with kernel-side write-through would pay
+        it once, which is what the algorithmic ledger models."""
+        rounds = min(int(rounds), self.n_rounds_max)
+        if rounds <= self.hw_rounds:
+            return 0
+        lo, hi = self.hw_rounds * self.B, rounds * self.B
+        pos = np.arange(lo, hi)
+        eff = pos < self.n
+        new = np.zeros((self.n, hi - lo), np.float32)
+        if eff.any():
+            idx = np.asarray(self.perm_idx)[lo:hi][eff]
+            cols = get_metric(self.metric)(self.data, self.data[jnp.asarray(idx)])
+            new[:, eff] = np.asarray(cols)
+        self._cols = np.concatenate([self._cols, new], axis=1)
+        self.hw_rounds = rounds
+        return self.n * int(eff.sum())
+
+    def view(self) -> Tuple[jnp.ndarray, int]:
+        """(dwarm, free_rounds) for a search call, width-padded with zeros.
+
+        The device array is memoised: repeat calls are free, and growth
+        within the current padded width patches only the new column slice
+        on device (``.at[].set``) instead of re-uploading the whole cache —
+        a full host→device ship happens only when the width itself steps
+        to the next PAD_ROUNDS multiple."""
+        wr = min(-(-max(self.hw_rounds, 1) // self.PAD_ROUNDS)
+                 * self.PAD_ROUNDS, self.n_rounds_max)
+        width = wr * self.B
+        if self._view is None or self._view.shape[1] != width:
+            dwarm = np.zeros((self.n, width), np.float32)
+            dwarm[:, : self.hw_rounds * self.B] = self._cols
+            self._view = jnp.asarray(dwarm)
+            self._view_hw = self.hw_rounds
+        elif self._view_hw < self.hw_rounds:
+            lo, hi = self._view_hw * self.B, self.hw_rounds * self.B
+            self._view = self._view.at[:, lo:hi].set(self._cols[:, lo:hi])
+            self._view_hw = self.hw_rounds
+        return self._view, self.hw_rounds
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _carry_delta(cols: jnp.ndarray, pidx: jnp.ndarray, pw: jnp.ndarray,
+                 n_prefix: jnp.ndarray, d1o, d2o, ao, d1n, d2n, an,
+                 sums: jnp.ndarray, sqsums: jnp.ndarray, *, k: int):
+    """Re-validate carried SWAP arm statistics after an accepted swap.
+
+    The carried Σg / Σg² (over the permutation prefix ``[0, n_prefix)``)
+    were accumulated under the previous iteration's (d1, d2, assign).  The
+    accepted swap changes ``g_{m,x}(y)`` only at reference points y whose
+    (d1, d2, assign) moved — the virtual-arm decomposition
+    ``g = base_x + 1[y∈C_m]·corr_x`` means each such point touches the
+    shared base term plus at most its old and new cluster rows (the ≤2
+    medoid rows invalidated by the swap); every other contribution is
+    permutation-invariant and carried verbatim.  Both passes below read the
+    PIC distance columns, so the whole update costs ZERO fresh distance
+    evaluations.  Detection by exact comparison is safe: unchanged entries
+    of ``medoid_cache`` are bit-identical recomputations.
+
+    Returns (sums', sqsums', n_changed_positions).
+    """
+    width = cols.shape[1]
+    in_prefix = (jnp.arange(width) < n_prefix).astype(jnp.float32)
+    b1, b2, ba = d1o[pidx], d2o[pidx], ao[pidx]
+    c1, c2, ca = d1n[pidx], d2n[pidx], an[pidx]
+    changed = ((b1 != c1) | (b2 != c2) | (ba != ca)).astype(jnp.float32)
+    w = pw * in_prefix * changed
+    s_old, q_old = _swap_batch_stats(cols, b1, b2, ba, w, k)
+    s_new, q_new = _swap_batch_stats(cols, c1, c2, ca, w, k)
+    return (sums - s_old + s_new, sqsums - q_old + q_new,
+            jnp.sum(w).astype(jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -238,6 +381,7 @@ class FitResult:
     swap_history: List[Tuple[int, int, float]] = field(default_factory=list)
     build_rounds: List[int] = field(default_factory=list)
     swap_exact_fallbacks: int = 0
+    cached_evals: int = 0  # evaluations served from the PIC cache (reuse="pic")
 
 
 class BanditPAM:
@@ -247,7 +391,12 @@ class BanditPAM:
                  delta: Optional[float] = None, max_swaps: Optional[int] = None,
                  seed: int = 0, sampling: str = "permutation",
                  baseline: str = "none", swap_early_stop: bool = False,
-                 cache_cols: int = 0):
+                 cache_cols: int = 0, reuse: str = "none"):
+        if reuse not in ("none", "pic"):
+            raise ValueError(f"unknown reuse mode {reuse!r}")
+        if reuse == "pic" and sampling != "permutation":
+            raise ValueError('reuse="pic" requires sampling="permutation" '
+                             "(the cache is keyed by a fixed permutation)")
         self.k = int(k)
         self.metric = metric
         self.batch_size = int(batch_size)
@@ -258,6 +407,15 @@ class BanditPAM:
         self.baseline = baseline
         self.swap_early_stop = swap_early_stop
         self.cache_cols = cache_cols
+        self.reuse = reuse
+
+    def _cache_view(self):
+        """(perm, dwarm, free_rounds) for the next search under either
+        cache regime (PIC lazily-grown vs upfront warm block vs none)."""
+        if self._pic is not None:
+            dwarm, free_rounds = self._pic.view()
+            return self._pic.perm, dwarm, free_rounds
+        return self._perm, self._dwarm, self._free_rounds
 
     # -- BUILD ----------------------------------------------------------
     def _make_cache(self, data: jnp.ndarray, key: jax.Array, res: FitResult):
@@ -282,21 +440,31 @@ class BanditPAM:
         med_mask = jnp.zeros((n,), jnp.bool_)
         medoids: List[int] = []
         build_evals = 0
+        build_cached = 0
         for _ in range(self.k):
             key, sub = jax.random.split(key)
+            perm, dwarm, free_rounds = self._cache_view()
             sr = _build_search(data, dnear, med_mask, sub, metric=self.metric,
                                batch_size=self.batch_size, delta=delta,
                                sampling=self.sampling, baseline=self.baseline,
-                               perm=self._perm, dwarm=self._dwarm,
-                               free_rounds=self._free_rounds)
+                               perm=perm, dwarm=dwarm, free_rounds=free_rounds)
             m = int(sr.best)
             medoids.append(m)
             med_mask = med_mask.at[m].set(True)
             drow = dist(data[m][None, :], data)[0]
             dnear = jnp.minimum(dnear, drow)
-            build_evals += int(sr.n_evals) + n
+            if self._pic is not None:
+                # Fresh cost = the columns newly materialised into the PIC
+                # cache (full columns, so later searches get them free);
+                # warm rounds are tallied separately as cached reads.
+                build_evals += self._pic.ensure(int(sr.rounds)) + n
+                build_cached += int(sr.n_evals_cached)
+            else:
+                build_evals += int(sr.n_evals) + n
             res.build_rounds.append(int(sr.rounds))
         res.evals_by_phase["build"] = build_evals
+        if self._pic is not None:
+            res.evals_by_phase["build_cached"] = build_cached
         return jnp.asarray(medoids, jnp.int32), med_mask, key
 
     # -- SWAP -----------------------------------------------------------
@@ -305,20 +473,44 @@ class BanditPAM:
         n = data.shape[0]
         delta = self.delta if self.delta is not None else 1.0 / (1000.0 * self.k * n)
         swap_evals = 0
+        swap_cached = 0
         loss = float(total_loss(data, medoids, metric=self.metric))
         converged = False
+        carry = None  # (sums, sqsums, rounds, d1, d2, assign) of the last search
         for _ in range(self.max_swaps):
             d1, d2, assign = medoid_cache(data, medoids, metric=self.metric)
             swap_evals += n * self.k
+            init_sums = init_sqsums = None
+            init_rounds = 0
+            perm, dwarm, free_rounds = self._cache_view()
+            if carry is not None:
+                # BanditPAM++ PIC: the previous search's per-arm moments stay
+                # valid for every arm whose g is unchanged; _carry_delta
+                # repairs only the contributions of reference points hit by
+                # the accepted swap, from cached columns (zero fresh evals).
+                c_sums, c_sq, c_rounds, d1o, d2o, ao = carry
+                width = dwarm.shape[1]
+                init_sums, init_sqsums, n_changed = _carry_delta(
+                    dwarm, self._pic.perm_idx[:width], self._pic.perm_w[:width],
+                    jnp.int32(c_rounds * self.batch_size), d1o, d2o, ao,
+                    d1, d2, assign, c_sums, c_sq, k=self.k)
+                swap_cached += n * int(n_changed)
+                init_rounds = c_rounds
             key, sub = jax.random.split(key)
             sr = _swap_search(data, d1, d2, assign, med_mask, sub,
                               metric=self.metric, batch_size=self.batch_size,
                               delta=delta, k=self.k, sampling=self.sampling,
                               baseline=self.baseline,
                               early_stop=self.swap_early_stop,
-                              perm=self._perm, dwarm=self._dwarm,
-                              free_rounds=self._free_rounds)
-            swap_evals += int(sr.n_evals)
+                              perm=perm, dwarm=dwarm, free_rounds=free_rounds,
+                              init_sums=init_sums, init_sqsums=init_sqsums,
+                              init_rounds=jnp.int32(init_rounds))
+            if self._pic is not None:
+                swap_evals += self._pic.ensure(int(sr.rounds))
+                swap_cached += int(sr.n_evals_cached)
+                carry = (sr.sums, sr.sqsums, int(sr.rounds), d1, d2, assign)
+            else:
+                swap_evals += int(sr.n_evals)
             res.swap_exact_fallbacks += int(sr.used_exact)
             m_idx, x_idx = divmod(int(sr.best), n)
             cand = medoids.at[m_idx].set(x_idx)
@@ -334,6 +526,8 @@ class BanditPAM:
                 converged = True
                 break
         res.evals_by_phase["swap"] = swap_evals
+        if self._pic is not None:
+            res.evals_by_phase["swap_cached"] = swap_cached
         return medoids, loss, converged
 
     # -- public ----------------------------------------------------------
@@ -345,15 +539,28 @@ class BanditPAM:
         res = FitResult(medoids=np.zeros(self.k, np.int64), loss=np.inf,
                         n_swaps=0, converged=False, distance_evals=0)
         key, ckey = jax.random.split(key)
-        self._perm, self._dwarm, self._free_rounds = self._make_cache(
-            data, ckey, res)
+        if self.reuse == "pic":
+            self._perm, self._dwarm, self._free_rounds = None, None, 0
+            perm = jax.random.permutation(ckey, data.shape[0]).astype(jnp.int32)
+            self._pic = _PicCache(data, perm, self.batch_size, self.metric)
+            if self.cache_cols > 0:
+                # optional upfront warm block, same semantics as reuse="none"
+                warm = min(self.cache_cols, data.shape[0]) // self.batch_size
+                res.evals_by_phase["cache_warm"] = self._pic.ensure(warm)
+        else:
+            self._pic = None
+            self._perm, self._dwarm, self._free_rounds = self._make_cache(
+                data, ckey, res)
         medoids, med_mask, key = self._build(data, key, res)
         medoids, loss, converged = self._swap(data, medoids, med_mask, key, res)
         res.medoids = np.asarray(medoids)
         res.loss = loss
         res.n_swaps = len(res.swap_history)
         res.converged = converged
-        res.distance_evals = sum(res.evals_by_phase.values())
+        res.distance_evals = sum(v for ph, v in res.evals_by_phase.items()
+                                 if not ph.endswith("_cached"))
+        res.cached_evals = sum(v for ph, v in res.evals_by_phase.items()
+                               if ph.endswith("_cached"))
         return res
 
     def fit_predict(self, data) -> Tuple[FitResult, np.ndarray]:

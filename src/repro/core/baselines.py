@@ -1,6 +1,15 @@
 """The paper's comparison baselines (Fig. 1a): CLARANS, Voronoi Iteration,
 CLARA.  These trade clustering quality for speed — the paper uses them to
 show BanditPAM matches PAM's (better) loss.
+
+Also FasterPAM (Schubert & Rousseeuw 2019/2021): the eager-swap exact
+k-medoids reference.  Unlike PAM's best-swap-per-pass, it performs every
+improving swap the moment it is found while sweeping the candidates, using
+the same ``base + 1[y∈C_m]·corr`` decomposition as our fused SWAP step to
+score all k removals of one candidate from a single distance row.  It
+converges to a (possibly different) 1-swap local optimum of the same
+neighbourhood structure as PAM, so it serves as the loss-parity check for
+the BanditPAM++ reuse engine.
 """
 
 from __future__ import annotations
@@ -13,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .banditpam import medoid_cache, total_loss
+from .banditpam import _swap_terms, medoid_cache, total_loss
 from .distances import get_metric
 from .pam import pam
 
@@ -23,6 +32,81 @@ class BaselineResult:
     medoids: np.ndarray
     loss: float
     distance_evals: int
+    n_swaps: int = 0
+
+
+# ---------------------------------------------------------------------------
+# FasterPAM (Schubert & Rousseeuw 2019) — eager multi-medoid swaps
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("metric", "k"))
+def _eager_swap_delta(data, x, d1, d2, assign, *, metric: str, k: int):
+    """Loss change of swapping candidate x in for each of the k medoids.
+
+    One distance row d(x, ·) scores all k removals via the FastPAM1
+    decomposition (the same base/corr split as the fused SWAP kernel):
+
+        Δ(m) = Σ_y base_x(y) + Σ_{y∈C_m} corr_x(y)
+
+    Returns (best slot, its Δ).
+    """
+    dx = get_metric(metric)(data[x][None, :], data)             # [1, n]
+    base, corr = _swap_terms(dx, d1, d2)
+    delta = jnp.sum(base) + jax.ops.segment_sum(corr[0], assign,
+                                                num_segments=k)
+    m = jnp.argmin(delta).astype(jnp.int32)
+    return m, delta[m]
+
+
+def fasterpam(data, k: int, metric: str = "l2", max_steps: Optional[int] = None,
+              seed: int = 0, init=None) -> BaselineResult:
+    """Eager-swap exact k-medoids: perform each improving swap immediately
+    while sweeping candidates; stop after a full improvement-free sweep.
+
+    Converges to a 1-swap local optimum of the same swap neighbourhood as
+    PAM (typically matching its loss to within a percent from random init),
+    at ``n`` distance evaluations per candidate scored plus an ``n·k``
+    cache rebuild per accepted swap — the loss-parity reference for
+    ``BanditPAM(reuse="pic")``.
+
+    ``init`` seeds the medoids (e.g. with a BUILD result); default is a
+    uniform random draw.
+    """
+    data = jnp.asarray(data, jnp.float32)
+    n = data.shape[0]
+    if init is None:
+        rng = np.random.default_rng(seed)
+        medoids = jnp.asarray(rng.choice(n, size=k, replace=False).astype(np.int32))
+    else:
+        medoids = jnp.asarray(np.asarray(init, np.int32))
+    d1, d2, assign = medoid_cache(data, medoids, metric=metric)
+    evals = n * k
+    loss = float(jnp.sum(d1))
+    max_steps = max_steps if max_steps is not None else 50 * n
+    med_set = set(np.asarray(medoids).tolist())
+    since_improved, steps, x, n_swaps = 0, 0, 0, 0
+    while since_improved < n and steps < max_steps:
+        if x not in med_set:
+            m_idx, dval = _eager_swap_delta(data, x, d1, d2, assign,
+                                            metric=metric, k=k)
+            evals += n
+            if float(dval) < -1e-7 * max(1.0, abs(loss)):
+                old = int(medoids[int(m_idx)])
+                med_set.discard(old)
+                med_set.add(x)
+                medoids = medoids.at[int(m_idx)].set(x)
+                d1, d2, assign = medoid_cache(data, medoids, metric=metric)
+                evals += n * k
+                loss = float(jnp.sum(d1))
+                since_improved = 0
+                n_swaps += 1
+            else:
+                since_improved += 1
+        else:
+            since_improved += 1
+        x = (x + 1) % n
+        steps += 1
+    return BaselineResult(np.asarray(medoids), loss, evals, n_swaps)
 
 
 # ---------------------------------------------------------------------------

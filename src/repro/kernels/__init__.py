@@ -2,7 +2,8 @@
 # evaluation (>=98% of BanditPAM wall clock).  Validated on CPU in
 # interpret mode against ref.py; lowers to Mosaic on TPU.
 from . import ops, ref
-from .ops import build_g_stats, install, pairwise_distance, swap_g_stats
+from .ops import (build_g_stats, install, pairwise_distance, swap_g_stats,
+                  swap_g_stats_cached)
 
 __all__ = ["ops", "ref", "pairwise_distance", "build_g_stats",
-           "swap_g_stats", "install"]
+           "swap_g_stats", "swap_g_stats_cached", "install"]

@@ -72,6 +72,19 @@ def build_g_stats(x: jnp.ndarray, y: jnp.ndarray, dnear_b: jnp.ndarray,
     return sums[:m], sq[:m], cross[:m]
 
 
+def _swap_prep(d1_b, d2_b, assign_b, w, k, lead_g, pad_b):
+    """Shared SWAP-kernel operand prep: pad the per-reference vectors,
+    w-mask the leader row, w-fold + lane-pad the cluster one-hot."""
+    if lead_g is None:
+        lead_g = jnp.zeros_like(d1_b)
+    d1 = jnp.pad(d1_b, (0, pad_b))
+    d2 = jnp.pad(d2_b, (0, pad_b))
+    lg = jnp.pad(lead_g * w, (0, pad_b))      # leader row must be w-masked
+    oh = jax.nn.one_hot(assign_b, k, dtype=jnp.float32) * w[:, None]
+    oh = _pad_to(_pad_to(oh, 1, 128), 0, 128)
+    return d1, d2, oh, lg
+
+
 def swap_g_stats(x: jnp.ndarray, y: jnp.ndarray, d1_b: jnp.ndarray,
                  d2_b: jnp.ndarray, assign_b: jnp.ndarray, w: jnp.ndarray,
                  k: int, lead_g: Optional[jnp.ndarray] = None,
@@ -83,20 +96,39 @@ def swap_g_stats(x: jnp.ndarray, y: jnp.ndarray, d1_b: jnp.ndarray,
     if interpret is None:
         interpret = _default_interpret()
     m = x.shape[0]
-    if lead_g is None:
-        lead_g = jnp.zeros_like(d1_b)
     xp = _pad_to(_pad_to(x, 1, 128), 0, tm)
     yp = _pad_to(_pad_to(y, 1, 128), 0, 128)
-    pad_b = yp.shape[0] - y.shape[0]
-    d1 = jnp.pad(d1_b, (0, pad_b))
-    d2 = jnp.pad(d2_b, (0, pad_b))
-    wp = jnp.pad(w, (0, pad_b))
-    lg = jnp.pad(lead_g * w, (0, pad_b))      # leader row must be w-masked
-    oh = jax.nn.one_hot(assign_b, k, dtype=jnp.float32) * w[:, None]
-    oh = _pad_to(_pad_to(oh, 1, 128), 0, 128)
+    d1, d2, oh, lg = _swap_prep(d1_b, d2_b, assign_b, w, k, lead_g,
+                                yp.shape[0] - y.shape[0])
     sums, sq, cross = _swap_g.swap_g_kernel(xp, yp, d1, d2, oh, lg,
                                             metric=metric, tm=tm,
                                             interpret=interpret)
+    return sums[:m, :k].T, sq[:m, :k].T, cross[:m, :k].T
+
+
+def swap_g_stats_cached(dxy: jnp.ndarray, d1_b: jnp.ndarray,
+                        d2_b: jnp.ndarray, assign_b: jnp.ndarray,
+                        w: jnp.ndarray, k: int,
+                        lead_g: Optional[jnp.ndarray] = None,
+                        *, tm: int = 128,
+                        interpret: Optional[bool] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused SWAP statistics served from a PIC distance-cache block.
+
+    Same contract as ``swap_g_stats`` but ``dxy`` ([m, B]) is a precomputed
+    slice of the permutation-invariant column cache — this is the kernel
+    behind warm (cached) bandit rounds and the carried-statistic repair of
+    ``BanditPAM(reuse="pic")`` on TPU: zero fresh distance work, stats only.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    m = dxy.shape[0]
+    dp = _pad_to(_pad_to(dxy, 1, 128), 0, tm)
+    d1, d2, oh, lg = _swap_prep(d1_b, d2_b, assign_b, w, k, lead_g,
+                                dp.shape[1] - dxy.shape[1])
+    sums, sq, cross = _swap_g.swap_g_from_cache_kernel(dp, d1, d2, oh, lg,
+                                                       tm=tm,
+                                                       interpret=interpret)
     return sums[:m, :k].T, sq[:m, :k].T, cross[:m, :k].T
 
 

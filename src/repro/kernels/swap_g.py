@@ -15,6 +15,11 @@ The [TM, B] base/corr tiles never touch HBM; only three [TM, K] stat
 blocks are written.  ``onehot`` is the padding-weighted cluster-assignment
 one-hot [B, K] (K padded to a lane multiple), so the reduction over C_m is
 a [TM, B] x [B, K] systolic matmul.
+
+``swap_g_from_cache_kernel`` is the BanditPAM++ PIC variant: the distance
+tile is read from a resident cached column block (warm rounds and
+carried-statistic repairs) instead of being recomputed — the d/base/corr
+pipeline after the distance pass is byte-identical.
 """
 
 from __future__ import annotations
@@ -28,9 +33,9 @@ from jax.experimental import pallas as pl
 from .pairwise import dist_tile
 
 
-def _kernel(x_ref, y_ref, d1_ref, d2_ref, oh_ref, lg_ref,
-            sums_ref, sq_ref, cross_ref, *, metric):
-    d = dist_tile(x_ref[...], y_ref[...], metric)        # [TM, B]
+def _stats_from_d(d, d1_ref, d2_ref, oh_ref, lg_ref,
+                  sums_ref, sq_ref, cross_ref):
+    """Shared fused-stats body, given the [TM, B] distance tile ``d``."""
     d1 = d1_ref[0, :][None, :]
     d2 = d2_ref[0, :][None, :]
     oh = oh_ref[...]                                      # [B, K] (w-folded)
@@ -44,6 +49,21 @@ def _kernel(x_ref, y_ref, d1_ref, d2_ref, oh_ref, lg_ref,
     sq_ref[...] = jnp.sum(base * base, 1, keepdims=True) + dot(
         2.0 * base * corr + corr * corr)
     cross_ref[...] = (base @ lg)[:, None] + dot(corr * lg[None, :])
+
+
+def _kernel(x_ref, y_ref, d1_ref, d2_ref, oh_ref, lg_ref,
+            sums_ref, sq_ref, cross_ref, *, metric):
+    d = dist_tile(x_ref[...], y_ref[...], metric)        # [TM, B]
+    _stats_from_d(d, d1_ref, d2_ref, oh_ref, lg_ref,
+                  sums_ref, sq_ref, cross_ref)
+
+
+def _kernel_cached(d_ref, d1_ref, d2_ref, oh_ref, lg_ref,
+                   sums_ref, sq_ref, cross_ref):
+    # BanditPAM++ PIC warm path: the distance tile comes straight from the
+    # resident cache block — no MXU distance pass, stats only.
+    _stats_from_d(d_ref[...], d1_ref, d2_ref, oh_ref, lg_ref,
+                  sums_ref, sq_ref, cross_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "tm", "interpret"))
@@ -76,4 +96,36 @@ def swap_g_kernel(x, y, d1_b, d2_b, onehot_w, lead_g, *, metric: str,
         out_shape=[jax.ShapeDtypeStruct((m, kp), jnp.float32)] * 3,
         interpret=interpret,
     )(x, y, d1_b[None, :], d2_b[None, :], onehot_w, lead_g[None, :])
+    return sums, sq, cross
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
+def swap_g_from_cache_kernel(dxy, d1_b, d2_b, onehot_w, lead_g, *,
+                             tm: int = 128, interpret: bool = False):
+    """PIC warm-round / carry-repair entry point: identical statistics to
+    ``swap_g_kernel`` but fed from a resident cached distance block.
+
+    dxy: [m, B] precomputed distances (a slice of the PIC column cache);
+    d1_b, d2_b, lead_g: [B]; onehot_w: [B, K] (w-folded, lead_g w-masked).
+    Returns (sums, sqsums, cross) each [m, K].
+    """
+    m, b = dxy.shape
+    kp = onehot_w.shape[1]
+    assert m % tm == 0 and b % 128 == 0 and kp % 128 == 0
+    grid = (m // tm,)
+    vec = lambda: pl.BlockSpec((1, b), lambda i: (0, 0))
+    out = lambda: pl.BlockSpec((tm, kp), lambda i: (i, 0))
+    sums, sq, cross = pl.pallas_call(
+        _kernel_cached,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, b), lambda i: (i, 0)),
+            vec(), vec(),
+            pl.BlockSpec((b, kp), lambda i: (0, 0)),
+            vec(),
+        ],
+        out_specs=[out(), out(), out()],
+        out_shape=[jax.ShapeDtypeStruct((m, kp), jnp.float32)] * 3,
+        interpret=interpret,
+    )(dxy, d1_b[None, :], d2_b[None, :], onehot_w, lead_g[None, :])
     return sums, sq, cross

@@ -6,6 +6,15 @@ import subprocess
 import sys
 import textwrap
 
+import jax
+import pytest
+
+if not hasattr(jax.sharding, "AxisType"):
+    # The mesh/shard_map API used here (and by repro.core.distributed)
+    # needs jax >= 0.6; skip cleanly on older installs.
+    pytest.skip("needs jax.sharding.AxisType (jax >= 0.6)",
+                allow_module_level=True)
+
 _SUBPROC = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

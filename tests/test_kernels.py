@@ -91,6 +91,28 @@ def test_swap_g_kernel_matches_ref(metric, m, b, d, k):
                                rtol=2e-4, atol=5e-3)
 
 
+@pytest.mark.parametrize("metric", ["l2", "l1"])
+@pytest.mark.parametrize("m,b,d,k", [(64, 100, 32, 3), (130, 64, 20, 10)])
+def test_swap_g_cached_kernel_matches_fresh(metric, m, b, d, k):
+    """PIC warm path: stats from a cached distance block must equal the
+    fused fresh-distance kernel (and thus the Eq. 12 oracle)."""
+    x, y = _data(m, b, d, seed=7)
+    rng = np.random.default_rng(8)
+    d1 = jnp.asarray(rng.uniform(0.1, 2.0, size=b).astype(np.float32))
+    d2 = jnp.asarray((np.asarray(d1) + rng.uniform(0.1, 2.0, size=b)).astype(np.float32))
+    assign = jnp.asarray(rng.integers(0, k, size=b).astype(np.int32))
+    w = jnp.asarray((rng.uniform(size=b) < 0.9).astype(np.float32))
+    gl = jnp.asarray(rng.standard_normal(b).astype(np.float32))
+    dxy = ref.pairwise_ref(x, y, metric)  # the "resident cache block"
+    want = ops.swap_g_stats(x, y, d1, d2, assign, w, k, lead_g=gl,
+                            metric=metric, interpret=True)
+    got = ops.swap_g_stats_cached(dxy, d1, d2, assign, w, k, lead_g=gl,
+                                  interpret=True)
+    for g, wnt in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wnt),
+                                   rtol=2e-4, atol=5e-3)
+
+
 def test_swap_g_cross_term():
     m, b, d, k = 64, 100, 16, 4
     x, y = _data(m, b, d, seed=5)

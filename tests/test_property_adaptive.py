@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional [test] extra; skip, don't die
 from hypothesis import given, settings, strategies as st
 
 from repro.core.adaptive import adaptive_search

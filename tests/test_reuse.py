@@ -1,0 +1,107 @@
+"""BanditPAM++ SWAP-phase reuse engine (reuse="pic"): medoid parity with
+reuse="none", the fresh/cached distance-evaluation ledger, and the
+FasterPAM eager-swap loss-parity reference."""
+import numpy as np
+import pytest
+
+from repro.core import BanditPAM, datasets, fasterpam, pam
+
+
+# ---------------------------------------------------------------------------
+# PIC medoid parity (acceptance: identical medoids on fixed seeds)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", ["l2", "cosine"])
+@pytest.mark.parametrize("k", [3, 5, 10])
+def test_pic_matches_none_medoids(metric, k):
+    data = datasets.mnist_like(500, seed=13)
+    a = BanditPAM(k, metric=metric, seed=0, reuse="none").fit(data)
+    b = BanditPAM(k, metric=metric, seed=0, reuse="pic").fit(data)
+    assert sorted(a.medoids.tolist()) == sorted(b.medoids.tolist())
+    assert b.loss == pytest.approx(a.loss, rel=1e-5)
+    # carried statistics must actually be exercised (cached reads > 0)
+    assert b.cached_evals > 0
+
+
+def test_pic_matches_none_large_n_and_ledger():
+    """n=2000 / k=5: same medoids, and the reuse engine pays >= 2x fewer
+    fresh SWAP-phase evaluations on a multi-swap run (acceptance bar)."""
+    data = datasets.mnist_like(2000, seed=1)
+    a = BanditPAM(5, metric="l2", seed=0, reuse="none").fit(data)
+    b = BanditPAM(5, metric="l2", seed=0, reuse="pic").fit(data)
+    assert sorted(a.medoids.tolist()) == sorted(b.medoids.tolist())
+    assert a.n_swaps == b.n_swaps
+    assert a.n_swaps >= 2  # multi-swap run, else the ledger claim is vacuous
+    assert a.evals_by_phase["swap"] >= 2 * b.evals_by_phase["swap"]
+    assert b.evals_by_phase["swap_cached"] > 0
+    # total fresh work must go down too, not just be reshuffled across phases
+    assert b.distance_evals < a.distance_evals
+
+
+def test_pic_ledger_split_is_consistent():
+    data = datasets.mnist_like(500, seed=13)
+    b = BanditPAM(5, metric="l2", seed=0, reuse="pic").fit(data)
+    fresh = sum(v for ph, v in b.evals_by_phase.items()
+                if not ph.endswith("_cached"))
+    cached = sum(v for ph, v in b.evals_by_phase.items()
+                 if ph.endswith("_cached"))
+    assert b.distance_evals == fresh
+    assert b.cached_evals == cached
+    assert {"build", "swap", "build_cached", "swap_cached"} <= set(
+        b.evals_by_phase)
+
+
+def test_pic_requires_permutation_sampling():
+    with pytest.raises(ValueError):
+        BanditPAM(3, sampling="replacement", reuse="pic")
+    with pytest.raises(ValueError):
+        BanditPAM(3, reuse="bogus")
+
+
+def test_pic_tracks_pam():
+    """Reuse must not change the answer: pic still matches exact PAM."""
+    data = datasets.mnist_like(500, seed=7)
+    p = pam(data, k=3, metric="l2")
+    b = BanditPAM(3, metric="l2", seed=0, reuse="pic").fit(data)
+    assert sorted(p.medoids.tolist()) == sorted(b.medoids.tolist())
+
+
+def test_pic_composes_with_leader_baseline():
+    data = datasets.mnist_like(500, seed=13)
+    a = BanditPAM(5, metric="l2", seed=0, baseline="leader",
+                  reuse="none").fit(data)
+    b = BanditPAM(5, metric="l2", seed=0, baseline="leader",
+                  reuse="pic").fit(data)
+    assert sorted(a.medoids.tolist()) == sorted(b.medoids.tolist())
+
+
+# ---------------------------------------------------------------------------
+# FasterPAM eager-swap reference
+# ---------------------------------------------------------------------------
+
+def test_fasterpam_loss_parity_with_pam():
+    data = datasets.mnist_like(500, seed=7)
+    p = pam(data, 5, metric="l2")
+    f = fasterpam(data, 5, metric="l2", seed=0)
+    # Both are 1-swap local optima of the same neighbourhood; eager order
+    # may land elsewhere, but the loss must be on par.
+    assert f.loss <= p.loss * 1.02
+    assert len(set(f.medoids.tolist())) == 5
+    assert f.distance_evals < p.distance_evals
+
+
+def test_fasterpam_from_build_init_never_worse():
+    data = datasets.scrna_like(400, seed=3)
+    p = pam(data, 5, metric="l1")
+    f = fasterpam(data, 5, metric="l1", seed=0, init=p.medoids)
+    # Seeded at PAM's optimum there is no improving swap: it must stay put.
+    assert f.n_swaps == 0
+    assert f.loss == pytest.approx(p.loss, rel=1e-5)
+
+
+def test_fasterpam_parity_bounds_banditpam_pic():
+    """The reuse engine's answer is as good as the eager-swap reference."""
+    data = datasets.mnist_like(500, seed=13)
+    b = BanditPAM(5, metric="l2", seed=0, reuse="pic").fit(data)
+    f = fasterpam(data, 5, metric="l2", seed=0)
+    assert b.loss <= f.loss * 1.02
