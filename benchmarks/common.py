@@ -4,10 +4,17 @@ from __future__ import annotations
 import math
 import os
 import time
-from typing import Callable, Dict, List
+from typing import Callable, List
 
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+# Bench-only solver overrides on top of repro.api.default_params (shared by
+# every benchmark that sweeps solvers): CLARANS' default neighbor budget is
+# n-scaled and would dwarf every other solver at bench sizes.
+BENCH_EXTRA = {
+    "clarans": dict(max_neighbors=150),
+}
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

@@ -1,21 +1,45 @@
 """Benchmark harness entry point — one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV.  Set REPRO_BENCH_FULL=1 for the
-paper-scale grids (default: CPU-quick grids)."""
+paper-scale grids (default: CPU-quick grids).
+
+``--json [PATH]`` runs only the facade solver sweep and writes it as JSON
+(default path ``BENCH_solvers.json``): loss + the fresh/cached
+distance-evaluation ledger per registered solver at fixed (n, k).
+``--solver`` (repeatable) restricts the sweep to named solvers."""
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    from repro.api import available_solvers
+
     from . import (kernels_bench, loss_quality, roofline, scaling_n,
-                   sigma_adaptivity, violation_pca)
+                   sigma_adaptivity, solvers, violation_pca)
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="BENCH_solvers.json",
+                    default=None, metavar="PATH",
+                    help="write the solver sweep to PATH as JSON and exit")
+    ap.add_argument("--solver", action="append", choices=available_solvers(),
+                    help="restrict the solver sweep (repeatable; default: "
+                         "every registered solver)")
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
+    if args.json is not None:
+        solvers.write_json(args.json, solvers=args.solver)
+        return
     failed = []
     for mod in (loss_quality, scaling_n, sigma_adaptivity, violation_pca,
-                kernels_bench, roofline):
+                solvers, kernels_bench, roofline):
         try:
-            mod.run()
+            if mod is solvers:
+                mod.sweep(solvers=args.solver)
+            else:
+                mod.run()
         except Exception:
             failed.append(mod.__name__)
             traceback.print_exc()

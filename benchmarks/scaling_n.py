@@ -1,11 +1,15 @@
 """Paper Figs. 1b / 2 / 3: distance evaluations (and wall time) per
 iteration vs n, across datasets/metrics/k — the almost-linear-scaling
-claim.  PAM/FastPAM1 references are exact: k*n^2 and n^2 per iteration."""
+claim.  PAM/FastPAM1 references are exact: k*n^2 and n^2 per iteration.
+Each mode is a (solver, params) pair driven through the ``repro.api``
+facade."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import BanditPAM, datasets
+from repro.api import KMedoids
+
+from repro.core import datasets
 
 from .common import FULL, emit, loglog_slope, timed
 
@@ -22,16 +26,16 @@ CASES = [
 def _modes(n: int):
     return {
         # paper-faithful §3.2: iid replacement sampling, raw CIs
-        "paper": dict(sampling="replacement", baseline="none"),
+        "paper": ("banditpam", dict(sampling="replacement", baseline="none")),
         # + App 2.2 permutation/FPC + leader control variate + warm cache
         # (cache scaled to n/4 so the upfront n*C warm block never
         #  dominates at small n — see EXPERIMENTS §Perf track 3 iter 4)
-        "optimized": dict(sampling="permutation", baseline="leader",
-                          cache_cols=min(1000, n // 4)),
+        "optimized": ("banditpam", dict(sampling="permutation",
+                                        baseline="leader",
+                                        cache_cols=min(1000, n // 4))),
         # + BanditPAM++ SWAP reuse: lazily-grown PIC distance cache and
         # carried per-arm statistics across swap iterations (reuse axis)
-        "optimized_pic": dict(sampling="permutation", baseline="leader",
-                              reuse="pic"),
+        "optimized_pic": ("banditpam_pp", dict(baseline="leader")),
     }
 
 
@@ -42,10 +46,12 @@ def run():
         for mode in ("paper", "optimized", "optimized_pic"):
             evs, walls = [], []
             for n in sizes:
-                kw = _modes(n)[mode]
+                solver, kw = _modes(n)[mode]
                 data = datasets.make(ds, n, seed=7)
-                b, wall = timed(lambda: BanditPAM(k, metric, seed=0,
-                                                  **kw).fit(data))
+                est, wall = timed(lambda: KMedoids(k, solver=solver,
+                                                   metric=metric, seed=0,
+                                                   **kw).fit(data))
+                b = est.report_
                 iters = k + b.n_swaps + 1
                 evs.append(b.distance_evals / iters)
                 walls.append(wall / iters)

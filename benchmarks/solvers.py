@@ -1,0 +1,53 @@
+"""Uniform solver sweep at fixed (n, k) through the ``repro.api`` facade:
+loss + the fresh/cached distance-evaluation ledger for every registered
+solver.  ``benchmarks/run.py --json`` serialises the sweep to
+``BENCH_solvers.json`` — the machine-readable perf trajectory."""
+from __future__ import annotations
+
+import json
+
+from repro.api import KMedoids, available_solvers, default_params
+
+from repro.core import datasets
+
+from .common import BENCH_EXTRA, FULL, emit, timed
+
+
+def sweep(n=None, k=5, metric="l2", solvers=None):
+    if n is None:
+        n = 2000 if FULL else 600
+    data = datasets.make("mnist_like", n, seed=0)
+    rows = {}
+    for s in solvers or available_solvers():
+        params = {**default_params(s), **BENCH_EXTRA.get(s, {})}
+        est, wall = timed(lambda: KMedoids(k, solver=s, metric=metric, seed=0,
+                                           **params).fit(data))
+        r = est.report_
+        rows[s] = {
+            "loss": float(r.loss),
+            "n_swaps": int(r.n_swaps),
+            "converged": bool(r.converged),
+            "wall_s": round(wall, 3),
+            "ledger": r.ledger(),
+        }
+        emit(f"solvers_{s}_n{n}", wall * 1e6,
+             f"loss={r.loss:.4f};fresh={r.distance_evals};"
+             f"cached={r.cached_evals}")
+    return {"bench": "solvers", "n": int(n), "k": int(k), "metric": metric,
+            "solvers": rows}
+
+
+def write_json(path="BENCH_solvers.json", **kw) -> str:
+    payload = sweep(**kw)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    emit("solvers_json_written", 0.0, path)
+    return path
+
+
+def run():
+    sweep()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,12 +1,14 @@
-"""Cluster LM hidden states with BanditPAM (the paper's technique as a
+"""Cluster LM hidden states with k-medoids (the paper's technique as a
 first-class feature of the LM stack).
 
 Runs a reduced qwen3 backbone over synthetic documents, takes the final
 hidden state of each document as its embedding, and finds k interpretable
 *exemplar documents* (medoids) under cosine distance — the pattern used
-for data curation / routing at scale (MedoidCurator is mesh-aware).
+for data curation / routing at scale.  Any registered solver/metric works
+through the ``repro.api.KMedoids`` facade (``repro.core.distributed.
+MedoidCurator`` is the mesh-aware variant of the same operation).
 
-    PYTHONPATH=src python examples/cluster_embeddings.py
+    PYTHONPATH=src python examples/cluster_embeddings.py [--solver ...]
 """
 import argparse
 
@@ -14,8 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import (KMedoids, available_metrics, available_solvers,
+                       default_params)
 from repro.configs import get_reduced
-from repro.core.distributed import MedoidCurator
 from repro.models import model as M
 from repro.train import synthetic_batch
 
@@ -36,6 +39,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", type=int, default=256)
     ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--solver", default="banditpam",
+                    choices=available_solvers())
+    # choices derived from the metric registry, so user-registered metrics
+    # are selectable too ("precomputed" needs a matrix, not embeddings)
+    ap.add_argument("--metric", default="cosine",
+                    choices=[m for m in available_metrics()
+                             if m != "precomputed"])
     args = ap.parse_args()
 
     cfg = get_reduced("qwen3_1_7b")
@@ -43,11 +53,13 @@ def main():
     print(f"embedding {args.docs} synthetic documents with reduced "
           f"{cfg.name} ...")
     embs = embed_documents(cfg, params, args.docs)
-    print(f"embeddings: {embs.shape}; clustering k={args.k} (cosine)")
+    print(f"embeddings: {embs.shape}; clustering k={args.k} "
+          f"({args.solver}, {args.metric})")
 
-    medoids, assign = MedoidCurator(args.k, metric="cosine").curate(embs)
-    sizes = np.bincount(assign, minlength=args.k)
-    print(f"exemplar documents (medoid ids): {sorted(medoids.tolist())}")
+    est = KMedoids(args.k, solver=args.solver, metric=args.metric, seed=0,
+                   **default_params(args.solver)).fit(embs)
+    sizes = np.bincount(est.labels_, minlength=args.k)
+    print(f"exemplar documents (medoid ids): {sorted(est.medoids_.tolist())}")
     print(f"cluster sizes: {sizes.tolist()}")
     print("every cluster center IS one of the input documents — that is "
           "the k-medoids interpretability win the paper targets.")

@@ -1,38 +1,68 @@
-"""Quickstart: BanditPAM vs exact PAM on a synthetic MNIST-like set.
+"""Quickstart: any registered solver vs the exact PAM reference, driven
+through the unified ``repro.api.KMedoids`` facade.
 
     PYTHONPATH=src python examples/quickstart.py [--n 2000] [--k 5]
+        [--solver banditpam] [--metric l2]
+
+``--solver``/``--metric`` choices come straight from the registries, so
+solvers and metrics registered by user code show up automatically.
+``--metric precomputed`` exercises the matrix path: the script computes
+the [n, n] L2 dissimilarity matrix up front and both solvers consume it
+without recomputing a single distance.
 """
 import argparse
 import time
 
-from repro.core import BanditPAM, datasets, pam
+import numpy as np
+
+from repro.api import (KMedoids, available_metrics, available_solvers,
+                       default_params)
+from repro.core import datasets, pairwise
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=2000)
     ap.add_argument("--k", type=int, default=5)
-    ap.add_argument("--metric", default="l2",
-                    choices=["l2", "l2sq", "l1", "cosine"])
+    ap.add_argument("--solver", default="banditpam",
+                    choices=available_solvers())
+    ap.add_argument("--metric", default="l2", choices=available_metrics())
     args = ap.parse_args()
 
-    data = datasets.mnist_like(args.n, seed=0)
-    print(f"data: {data.shape}, metric={args.metric}, k={args.k}")
+    # one draw, split into a fit set and an in-distribution held-out set
+    full = datasets.mnist_like(args.n + 256, seed=0)
+    data, queries = full[:args.n], full[args.n:]
+    if args.metric == "precomputed":
+        X = np.asarray(pairwise(data, data, metric="l2"))
+        Q = np.asarray(pairwise(queries, data, metric="l2"))
+    else:
+        X, Q = data, queries
+    print(f"data: {data.shape}, metric={args.metric}, "
+          f"solver={args.solver}, k={args.k}")
 
     t0 = time.time()
-    p = pam(data, args.k, metric=args.metric)
-    t_pam = time.time() - t0
-    print(f"PAM        medoids={sorted(p.medoids.tolist())} "
-          f"loss={p.loss:.2f} dist_evals={p.distance_evals:,} ({t_pam:.1f}s)")
+    ref = KMedoids(args.k, solver="fastpam1", metric=args.metric).fit(X)
+    t_ref = time.time() - t0
+    print(f"pam (exact)  medoids={sorted(ref.medoids_.tolist())} "
+          f"loss={ref.loss_:.2f} "
+          f"dist_evals={ref.report_.distance_evals:,} ({t_ref:.1f}s)")
 
+    params = default_params(args.solver)
     t0 = time.time()
-    b = BanditPAM(args.k, metric=args.metric, seed=0, baseline="leader").fit(data)
-    t_bp = time.time() - t0
-    print(f"BanditPAM  medoids={sorted(b.medoids.tolist())} "
-          f"loss={b.loss:.2f} dist_evals={b.distance_evals:,} ({t_bp:.1f}s)")
-    print(f"same medoids as PAM: {sorted(p.medoids) == sorted(b.medoids)}")
+    est = KMedoids(args.k, solver=args.solver, metric=args.metric, seed=0,
+                   **params).fit(X)
+    t_est = time.time() - t0
+    print(f"{args.solver:12s} medoids={sorted(est.medoids_.tolist())} "
+          f"loss={est.loss_:.2f} "
+          f"dist_evals={est.report_.distance_evals:,} ({t_est:.1f}s)")
+    print(f"same medoids as PAM: "
+          f"{sorted(ref.medoids_.tolist()) == sorted(est.medoids_.tolist())}")
     print(f"distance-evaluation reduction: "
-          f"{p.distance_evals / max(b.distance_evals, 1):.1f}x")
+          f"{ref.report_.distance_evals / max(est.report_.distance_evals, 1):.1f}x")
+
+    labels = est.predict(Q)
+    print(f"out-of-sample predict on {len(labels)} new points: cluster sizes "
+          f"{np.bincount(labels, minlength=args.k).tolist()}")
 
 
 if __name__ == "__main__":

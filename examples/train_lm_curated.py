@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, get_reduced
+from repro.configs import get_config
 from repro.core import BanditPAM, medoid_cache
 from repro.models import model as M
 from repro.runtime.fault import FaultTolerantLoop

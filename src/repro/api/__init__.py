@@ -1,0 +1,19 @@
+# repro.api — the estimator facade: one sklearn-style KMedoids fronting
+# every registered k-medoids solver, with out-of-sample inference and the
+# unified FitReport ledger.
+from repro.core.distances import (attach_index, available_metrics,
+                                  register_metric, resolve_metric)
+from repro.core.report import FitReport
+
+from .estimator import KMedoids
+from .predict import PALLAS_METRICS, medoid_distances, resolve_backend
+from .registry import (available_solvers, default_params, get_solver,
+                       register_solver)
+
+__all__ = [
+    "KMedoids", "FitReport", "register_solver", "get_solver",
+    "available_solvers", "default_params", "register_metric",
+    "available_metrics",
+    "resolve_metric", "attach_index", "medoid_distances", "resolve_backend",
+    "PALLAS_METRICS",
+]

@@ -1,0 +1,161 @@
+"""``KMedoids`` — the one estimator fronting every solver in the repo.
+
+scikit-learn-style surface::
+
+    from repro.api import KMedoids
+
+    est = KMedoids(k=5, solver="banditpam", metric="l2", seed=0)
+    est.fit(X)                      # X: [n, d]
+    est.medoids_                    # [k] indices into X
+    est.labels_                     # [n] in-sample assignment
+    est.loss_                       # sum of nearest-medoid dissimilarities
+    est.report_                     # the solver's full FitReport (ledger etc.)
+    est.predict(X_new)              # [m] nearest-medoid labels
+    est.transform(X_new)            # [m, k] dissimilarities to the medoids
+
+``solver`` is any name in ``available_solvers()`` (extendable via
+``register_solver``); ``metric`` is a registered name, a raw
+``[m,d]x[r,d]->[m,r]`` callable (auto-registered), or ``"precomputed"``.
+
+With ``metric="precomputed"``, ``fit`` takes the ``[n, n]`` dissimilarity
+matrix itself, and ``predict``/``transform`` take the ``[m, n]``
+query-to-fit-points dissimilarity block — out-of-sample inference then
+reduces to selecting the fitted medoid columns.
+
+Unlike the legacy ``BanditPAM.fit_predict`` (which returns a
+``(FitReport, labels)`` tuple), ``KMedoids.fit_predict`` follows the
+sklearn convention and returns labels only.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.banditpam import medoid_cache
+from repro.core.distances import attach_index, resolve_metric
+
+from .predict import DEFAULT_CHUNK, medoid_distances
+from .registry import get_solver
+
+
+class KMedoids:
+    """k-medoids clustering through the solver registry.
+
+    Args:
+      k: number of medoids.
+      solver: registered solver name (``available_solvers()``).
+      metric: registered metric name, callable, or ``"precomputed"``.
+      seed: forwarded to stochastic solvers (deterministic ones ignore it).
+      predict_backend: ``"auto"`` | ``"pallas"`` | ``"jnp"`` — which pairwise
+        path scores out-of-sample points (overridable per call).
+      predict_chunk: query rows per dispatch in predict/transform, bounding
+        the resident ``[chunk, k]`` block.
+      **solver_params: passed through to the solver (e.g. ``reuse="pic"``,
+        ``baseline="leader"``, ``max_neighbors=...``).
+    """
+
+    def __init__(self, k: int, solver: str = "banditpam", metric="l2",
+                 seed: int = 0, predict_backend: str = "auto",
+                 predict_chunk: int = DEFAULT_CHUNK, **solver_params):
+        if int(k) < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        self.k = int(k)
+        self.solver = solver
+        self.metric = metric
+        self.seed = int(seed)
+        self.predict_backend = predict_backend
+        self.predict_chunk = int(predict_chunk)
+        self.solver_params = dict(solver_params)
+        # fitted state
+        self.report_ = None
+        self.medoids_ = None
+        self.labels_ = None
+        self.loss_ = None
+
+    def __repr__(self):
+        extra = "".join(f", {k}={v!r}" for k, v in self.solver_params.items())
+        return (f"KMedoids(k={self.k}, solver={self.solver!r}, "
+                f"metric={self.metric!r}, seed={self.seed}{extra})")
+
+    # -- fitting ---------------------------------------------------------
+    def fit(self, X) -> "KMedoids":
+        solver_fn = get_solver(self.solver)        # fail fast on bad names
+        metric_name = resolve_metric(self.metric)
+        X = np.asarray(X, np.float32)
+        if X.ndim != 2:
+            raise ValueError(f"expected [n, d] data, got shape {X.shape}")
+        if X.shape[0] <= self.k:
+            raise ValueError(f"need n > k, got n={X.shape[0]}, k={self.k}")
+        if metric_name == "precomputed":
+            data = attach_index(X)                 # validates squareness
+        else:
+            data = jnp.asarray(X)
+        report = solver_fn(data, self.k, metric=metric_name, seed=self.seed,
+                           **self.solver_params)
+        medoids = np.asarray(report.medoids).astype(np.int64)
+        # In-sample labels under the SAME metric the solver used (for
+        # "precomputed" that is the matrix-lookup metric over `data`).
+        _, _, assign = medoid_cache(data, jnp.asarray(medoids, jnp.int32),
+                                    metric=metric_name)
+        report.labels = np.asarray(assign)
+        report.solver = self.solver
+        report.metric = metric_name
+        self.report_ = report
+        self.medoids_ = medoids
+        self.labels_ = report.labels
+        self.loss_ = float(report.loss)
+        self._metric_name = metric_name
+        self._n_fit = X.shape[0]
+        if metric_name == "precomputed":
+            self._medoid_points = None
+            self.n_features_in_ = X.shape[1]
+        else:
+            self._medoid_points = jnp.asarray(X[medoids])
+            self.n_features_in_ = X.shape[1]
+        return self
+
+    def _check_fitted(self):
+        if self.report_ is None:
+            raise ValueError("this KMedoids instance is not fitted yet; "
+                             "call fit(X) first")
+
+    # -- inference -------------------------------------------------------
+    def transform(self, X, backend: Optional[str] = None) -> np.ndarray:
+        """Dissimilarities from each query row to the fitted medoids, [m, k].
+
+        With ``metric="precomputed"``, ``X`` is the ``[m, n_fit]``
+        query-to-fit-points dissimilarity block.
+        """
+        self._check_fitted()
+        X = np.asarray(X, np.float32)
+        if X.ndim != 2:
+            raise ValueError(f"expected 2-D queries, got shape {X.shape}")
+        if self._metric_name == "precomputed":
+            if X.shape[1] != self._n_fit:
+                raise ValueError(
+                    f"precomputed queries must be [m, n_fit={self._n_fit}] "
+                    f"dissimilarities to the fit points, got {X.shape}")
+            return X[:, self.medoids_]
+        if X.shape[1] != self.n_features_in_:
+            raise ValueError(f"query feature dim {X.shape[1]} != fitted "
+                             f"{self.n_features_in_}")
+        return medoid_distances(
+            X, self._medoid_points, self._metric_name,
+            backend=self.predict_backend if backend is None else backend,
+            chunk=self.predict_chunk)
+
+    def predict(self, X, backend: Optional[str] = None) -> np.ndarray:
+        """Nearest-medoid label (0..k-1) for each query row."""
+        return np.argmin(self.transform(X, backend=backend), axis=1)
+
+    # -- sklearn conveniences -------------------------------------------
+    def fit_predict(self, X) -> np.ndarray:
+        """Fit and return the in-sample labels (labels ONLY — sklearn
+        convention, unlike the legacy ``BanditPAM.fit_predict`` tuple)."""
+        return self.fit(X).labels_
+
+    def fit_transform(self, X) -> np.ndarray:
+        return self.fit(X).transform(X)

@@ -1,0 +1,73 @@
+"""Batched out-of-sample inference against fitted medoids.
+
+New points never touch the solvers: assigning a query point is one
+``[m_query, k]`` pairwise-dissimilarity block against the k medoid rows,
+chunked over the query axis so the resident block never exceeds
+``chunk × max(k, d)`` — on TPU that keeps each Pallas tile set comfortably
+inside VMEM regardless of how many points are being scored.
+
+Two backends compute the block:
+
+* ``"pallas"`` — ``repro.kernels.ops.pairwise_distance`` (the tiled MXU
+  kernel; interpret-mode on CPU).  Only the kernel-implemented metrics.
+* ``"jnp"`` — ``repro.core.distances.pairwise`` (jit'd XLA).  Any
+  registered metric, including user callables.
+
+``"auto"`` routes kernel-supported metrics through Pallas when a real
+accelerator backend is present and falls back to jnp otherwise (CPU
+interpret-mode is correct but orders of magnitude slower, so it is never
+auto-selected).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distances import pairwise
+from repro.kernels import ops
+
+# Metrics implemented by the Pallas pairwise kernel (kernels/pairwise.py).
+PALLAS_METRICS = ("l2", "l2sq", "l1", "cosine")
+
+DEFAULT_CHUNK = 8192
+
+
+def resolve_backend(backend: Optional[str], metric: str) -> str:
+    """Normalise a backend argument to {"pallas", "jnp"}."""
+    if backend in (None, "auto"):
+        if metric in PALLAS_METRICS and jax.default_backend() != "cpu":
+            return "pallas"
+        return "jnp"
+    if backend not in ("pallas", "jnp"):
+        raise ValueError(f"unknown predict backend {backend!r}; "
+                         f"expected 'auto', 'pallas', or 'jnp'")
+    if backend == "pallas" and metric not in PALLAS_METRICS:
+        raise ValueError(f"metric {metric!r} has no Pallas kernel "
+                         f"(kernel metrics: {list(PALLAS_METRICS)}); "
+                         f"use backend='jnp'")
+    return backend
+
+
+def medoid_distances(x: np.ndarray, medoid_points: jnp.ndarray, metric: str,
+                     *, backend: Optional[str] = None,
+                     chunk: int = DEFAULT_CHUNK) -> np.ndarray:
+    """``[m, d]`` queries × ``[k, d]`` fitted medoids → ``[m, k]`` float32.
+
+    Chunked over the query axis; each chunk is one kernel/XLA dispatch.
+    """
+    backend = resolve_backend(backend, metric)
+    chunk = max(1, int(chunk))
+    m = x.shape[0]
+    out = np.empty((m, medoid_points.shape[0]), np.float32)
+    for lo in range(0, m, chunk):
+        xc = jnp.asarray(x[lo:lo + chunk], jnp.float32)
+        if backend == "pallas":
+            d = ops.pairwise_distance(xc, medoid_points, metric=metric)
+        else:
+            d = pairwise(xc, medoid_points, metric=metric)
+        out[lo:lo + chunk] = np.asarray(d, np.float32)
+    return out

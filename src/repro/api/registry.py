@@ -1,0 +1,112 @@
+"""Solver registry for the ``KMedoids`` facade.
+
+Mirrors the ``repro.core.distances`` metric-registry pattern: an open
+string-keyed table, so each new k-medoids algorithm (the solver space keeps
+growing — FasterPAM 2019, BanditPAM++ 2023, OneBatchPAM 2025, ...) slots in
+as one registered function instead of a new public entrypoint.
+
+Solver contract::
+
+    fn(data, k, *, metric: str, seed: int, **params) -> FitReport
+
+``data`` is a ``[n, d]`` float32 array (already ``attach_index``-augmented
+when ``metric == "precomputed"``); ``metric`` is a REGISTERED name (the
+facade resolves callables first); ``params`` are solver-specific knobs
+passed through from ``KMedoids(**solver_params)``.  The returned
+``FitReport`` must carry medoids, loss, and the fresh/cached
+distance-evaluation ledger; ``labels`` / ``solver`` / ``metric`` fields are
+filled by the facade.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.core.banditpam import BanditPAM
+from repro.core.baselines import clara, clarans, fasterpam, voronoi_iteration
+from repro.core.pam import pam
+from repro.core.report import FitReport
+
+Solver = Callable[..., FitReport]
+
+_SOLVERS: Dict[str, Solver] = {}
+
+
+def register_solver(name: str, fn: Solver) -> None:
+    _SOLVERS[name] = fn
+
+
+def get_solver(name: str) -> Solver:
+    if name not in _SOLVERS:
+        raise KeyError(f"unknown solver {name!r}; have {sorted(_SOLVERS)}")
+    return _SOLVERS[name]
+
+
+def available_solvers():
+    return sorted(_SOLVERS)
+
+
+# Solvers that accept the adaptive-search knobs (baseline / sampling /
+# cache_cols / ...).
+BANDIT_SOLVERS = ("banditpam", "banditpam_pp")
+
+
+def default_params(solver: str) -> dict:
+    """Recommended ``solver_params`` for a solver — the single source the
+    examples and benchmarks draw from, so a newly registered solver is
+    configured in one place.  The bandit solvers get the leader
+    control variate (the repo's best configuration); everything else runs
+    stock."""
+    return {"baseline": "leader"} if solver in BANDIT_SOLVERS else {}
+
+
+# ---------------------------------------------------------------------------
+# Built-in solvers — thin adapters over the legacy entrypoints, so
+# KMedoids(solver=s) is evaluation-for-evaluation identical to calling them.
+# ---------------------------------------------------------------------------
+
+def _banditpam(data, k, *, metric, seed, **params):
+    return BanditPAM(k, metric=metric, seed=seed, **params).fit(data)
+
+
+def _banditpam_pp(data, k, *, metric, seed, **params):
+    # BanditPAM++ = the SWAP-phase reuse engine (virtual arms over the
+    # permutation-invariant distance cache).
+    params.setdefault("reuse", "pic")
+    return BanditPAM(k, metric=metric, seed=seed, **params).fit(data)
+
+
+def _pam(data, k, *, metric, seed, **params):
+    # Deterministic; seed intentionally unused.
+    return pam(data, k, metric=metric, fastpam1=False, **params)
+
+
+def _fastpam1(data, k, *, metric, seed, **params):
+    # Identical medoids to PAM; n² (not k·n²) SWAP accounting.
+    return pam(data, k, metric=metric, fastpam1=True, **params)
+
+
+def _fasterpam(data, k, *, metric, seed, **params):
+    return fasterpam(data, k, metric=metric, seed=seed, **params)
+
+
+def _clara(data, k, *, metric, seed, **params):
+    return clara(data, k, metric=metric, seed=seed, **params)
+
+
+def _clarans(data, k, *, metric, seed, **params):
+    return clarans(data, k, metric=metric, seed=seed, **params)
+
+
+def _voronoi(data, k, *, metric, seed, **params):
+    return voronoi_iteration(data, k, metric=metric, seed=seed, **params)
+
+
+register_solver("banditpam", _banditpam)
+register_solver("banditpam_pp", _banditpam_pp)
+register_solver("pam", _pam)
+register_solver("fastpam1", _fastpam1)
+register_solver("fasterpam", _fasterpam)
+register_solver("clara", _clara)
+register_solver("clarans", _clarans)
+register_solver("voronoi", _voronoi)

@@ -1,2 +1,5 @@
 from .base import (ARCH_IDS, SHAPES, ArchConfig, ShapeConfig, cells,
                    get_config, get_reduced, supports_long_context)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ArchConfig", "ShapeConfig", "cells",
+           "get_config", "get_reduced", "supports_long_context"]

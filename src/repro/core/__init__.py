@@ -1,15 +1,18 @@
 # repro.core — the paper's contribution: BanditPAM k-medoids via
 # multi-armed bandits, plus the exact PAM oracles and quality baselines.
 from .adaptive import SearchResult, adaptive_search
+from .report import FitReport
 from .banditpam import BanditPAM, FitResult, medoid_cache, total_loss
-from .distances import available_metrics, get_metric, pairwise, register_metric
+from .distances import (attach_index, available_metrics, get_metric, pairwise,
+                        register_metric, resolve_metric)
 from .pam import PAMResult, pam
-from .baselines import clara, clarans, fasterpam, voronoi_iteration
+from .baselines import BaselineResult, clara, clarans, fasterpam, voronoi_iteration
 from . import datasets
 
 __all__ = [
-    "SearchResult", "adaptive_search", "BanditPAM", "FitResult",
-    "medoid_cache", "total_loss", "available_metrics", "get_metric",
-    "pairwise", "register_metric", "PAMResult", "pam", "clara", "clarans",
-    "fasterpam", "voronoi_iteration", "datasets",
+    "SearchResult", "adaptive_search", "BanditPAM", "FitReport", "FitResult",
+    "medoid_cache", "total_loss", "attach_index", "available_metrics",
+    "get_metric", "pairwise", "register_metric", "resolve_metric",
+    "PAMResult", "pam", "BaselineResult", "clara", "clarans", "fasterpam",
+    "voronoi_iteration", "datasets",
 ]

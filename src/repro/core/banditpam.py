@@ -49,8 +49,8 @@ repairs.  ``reuse="none"`` reproduces the original ledger exactly.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+import warnings
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +58,7 @@ import numpy as np
 
 from .adaptive import SearchResult, adaptive_search
 from .distances import get_metric
+from .report import FitReport
 
 _EXACT_CHUNK = 512  # reference-chunk size for exact fallback passes
 
@@ -370,18 +371,9 @@ def _carry_delta(cols: jnp.ndarray, pidx: jnp.ndarray, pw: jnp.ndarray,
 # Driver
 # ---------------------------------------------------------------------------
 
-@dataclass
-class FitResult:
-    medoids: np.ndarray
-    loss: float
-    n_swaps: int
-    converged: bool
-    distance_evals: int
-    evals_by_phase: Dict[str, int] = field(default_factory=dict)
-    swap_history: List[Tuple[int, int, float]] = field(default_factory=list)
-    build_rounds: List[int] = field(default_factory=list)
-    swap_exact_fallbacks: int = 0
-    cached_evals: int = 0  # evaluations served from the PIC cache (reuse="pic")
+# Every solver in the repo now emits the unified FitReport; the old name
+# remains importable as a thin alias.
+FitResult = FitReport
 
 
 class BanditPAM:
@@ -564,6 +556,11 @@ class BanditPAM:
         return res
 
     def fit_predict(self, data) -> Tuple[FitResult, np.ndarray]:
+        warnings.warn(
+            "BanditPAM.fit_predict returns a (FitReport, labels) tuple, which "
+            "diverges from the sklearn convention; use "
+            "repro.api.KMedoids(...).fit_predict for labels-only",
+            FutureWarning, stacklevel=2)
         res = self.fit(data)
         data = jnp.asarray(data, jnp.float32)
         _, _, assign = medoid_cache(data, jnp.asarray(res.medoids),

@@ -15,7 +15,6 @@ the BanditPAM++ reuse engine.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
 from typing import Optional
 
 import jax
@@ -25,14 +24,10 @@ import numpy as np
 from .banditpam import _swap_terms, medoid_cache, total_loss
 from .distances import get_metric
 from .pam import pam
+from .report import FitReport
 
-
-@dataclass
-class BaselineResult:
-    medoids: np.ndarray
-    loss: float
-    distance_evals: int
-    n_swaps: int = 0
+# Alias of the unified report type (see repro.core.report).
+BaselineResult = FitReport
 
 
 # ---------------------------------------------------------------------------
@@ -106,7 +101,10 @@ def fasterpam(data, k: int, metric: str = "l2", max_steps: Optional[int] = None,
             since_improved += 1
         x = (x + 1) % n
         steps += 1
-    return BaselineResult(np.asarray(medoids), loss, evals, n_swaps)
+    return BaselineResult(medoids=np.asarray(medoids), loss=loss,
+                          distance_evals=evals, n_swaps=n_swaps,
+                          converged=since_improved >= n,
+                          evals_by_phase={"swap": evals})
 
 
 # ---------------------------------------------------------------------------
@@ -139,14 +137,18 @@ def voronoi_iteration(data, k: int, metric: str = "l2", max_iters: int = 50,
     rng = np.random.default_rng(seed)
     medoids = jnp.asarray(rng.choice(n, size=k, replace=False).astype(np.int32))
     evals = 0
+    converged = False
     for _ in range(max_iters):
         new_medoids, _ = _voronoi_update(data, medoids, metric=metric, k=k)
         evals += n * n + n * k
         if bool(jnp.all(new_medoids == medoids)):
+            converged = True
             break
         medoids = new_medoids
     loss = float(total_loss(data, medoids, metric=metric))
-    return BaselineResult(np.asarray(medoids), loss, evals)
+    return BaselineResult(medoids=np.asarray(medoids), loss=loss,
+                          distance_evals=evals, converged=converged,
+                          evals_by_phase={"alternate": evals})
 
 
 # ---------------------------------------------------------------------------
@@ -182,7 +184,9 @@ def clarans(data, k: int, metric: str = "l2", num_local: int = 2,
                 j += 1
         if cur_loss < best_loss:
             best_loss, best_medoids = cur_loss, np.asarray(cur)
-    return BaselineResult(best_medoids, best_loss, evals)
+    return BaselineResult(medoids=best_medoids, loss=best_loss,
+                          distance_evals=evals,
+                          evals_by_phase={"search": evals})
 
 
 # ---------------------------------------------------------------------------
@@ -209,4 +213,6 @@ def clara(data, k: int, metric: str = "l2", n_samples: int = 5,
         evals += n * k
         if loss < best_loss:
             best_loss, best_medoids = loss, medoids_global
-    return BaselineResult(np.asarray(best_medoids), best_loss, evals)
+    return BaselineResult(medoids=np.asarray(best_medoids), loss=best_loss,
+                          distance_evals=evals,
+                          evals_by_phase={"subsample": evals})

@@ -22,7 +22,6 @@ assignments for data curation (examples/train_lm_curated.py).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -30,8 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .adaptive import SearchResult, adaptive_search
-from .banditpam import FitResult, _build_g, _swap_batch_stats, _swap_terms
+from .adaptive import adaptive_search
+from .banditpam import FitResult, _build_g, _swap_batch_stats
 from .distances import get_metric
 
 

@@ -12,8 +12,7 @@ The argmin tie-breaking (flattened ``m·n + x``, lowest index) matches
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +21,7 @@ import numpy as np
 from .banditpam import (_build_g, _ref_chunks, _swap_batch_stats,
                         medoid_cache, total_loss)
 from .distances import get_metric
+from .report import FitReport
 
 _CHUNK = 512
 
@@ -60,15 +60,8 @@ def _swap_mu_exact(data: jnp.ndarray, d1: jnp.ndarray, d2: jnp.ndarray,
     return sums / n
 
 
-@dataclass
-class PAMResult:
-    medoids: np.ndarray
-    loss: float
-    n_swaps: int
-    converged: bool
-    distance_evals: int
-    evals_by_phase: Dict[str, int] = field(default_factory=dict)
-    swap_history: List[Tuple[int, int, float]] = field(default_factory=list)
+# Alias of the unified report type (see repro.core.report).
+PAMResult = FitReport
 
 
 def pam(data, k: int, metric: str = "l2", max_swaps: int | None = None,

@@ -1,0 +1,60 @@
+"""The one fit report every k-medoids solver in this repo emits.
+
+Historically each entrypoint had its own result type (``FitResult`` for
+``BanditPAM``, ``PAMResult`` for ``pam``, ``BaselineResult`` for the
+baselines) with divergent fields, which made cross-solver comparisons —
+the paper's whole point — need per-type glue.  ``FitReport`` collapses
+them: the old names remain importable as aliases of this class, so every
+solver now returns the same dataclass and the ``repro.api.KMedoids``
+facade can treat them interchangeably.
+
+Ledger semantics (the paper's headline metric):
+
+* ``distance_evals`` — FRESH pairwise dissimilarity evaluations the
+  algorithm paid for, exactly as the paper counts them.
+* ``cached_evals`` — evaluations served from a distance cache (the
+  BanditPAM++ PIC engine); zero for cache-less solvers.
+* ``evals_by_phase`` — the itemised split.  Keys ending in ``_cached``
+  count cache-served work and are excluded from ``distance_evals``;
+  everything else is fresh.  Typical keys: ``build``, ``swap``,
+  ``cache_warm``, ``build_cached``, ``swap_cached``.
+
+``labels`` (the in-sample cluster assignment) is filled by the facade
+after the solve; solvers themselves only need medoids + loss + ledger.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class FitReport:
+    medoids: np.ndarray
+    loss: float
+    n_swaps: int = 0
+    # False by default: only solvers with an actual convergence criterion
+    # (banditpam*, pam/fastpam1, fasterpam, voronoi) set it — budget-
+    # exhausting solvers (clara, clarans) honestly report False.
+    converged: bool = False
+    distance_evals: int = 0
+    evals_by_phase: Dict[str, int] = field(default_factory=dict)
+    swap_history: List[Tuple[int, int, float]] = field(default_factory=list)
+    build_rounds: List[int] = field(default_factory=list)
+    swap_exact_fallbacks: int = 0
+    cached_evals: int = 0   # evaluations served from a distance cache
+    labels: Optional[np.ndarray] = None
+    solver: str = ""
+    metric: str = ""
+
+    def ledger(self) -> Dict[str, object]:
+        """The unified fresh/cached distance-evaluation ledger as one dict
+        (what ``benchmarks/run.py --json`` serialises per solver)."""
+        return {
+            "fresh": int(self.distance_evals),
+            "cached": int(self.cached_evals),
+            "by_phase": {k: int(v) for k, v in self.evals_by_phase.items()},
+        }

@@ -1,2 +1,5 @@
 from . import compression, sharding
 from .sharding import set_mesh, shard, sharding_for, spec_for
+
+__all__ = ["compression", "sharding", "set_mesh", "shard", "sharding_for",
+           "spec_for"]

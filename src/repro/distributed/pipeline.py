@@ -17,7 +17,6 @@ option rather than the default.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

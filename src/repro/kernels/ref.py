@@ -8,7 +8,6 @@ the math of ``repro.core`` directly.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -9,7 +9,7 @@ state) to a NamedSharding derived from the parameter naming conventions.
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,13 +10,12 @@ the dry-run, which this driver shares its cell-assembly with).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import SHAPES, get_config, get_reduced
+from repro.configs import get_config, get_reduced
 from repro.distributed import sharding as shrules
 from repro.models import model as M
 from repro.runtime.elastic import build_mesh, plan_remesh

@@ -1,1 +1,3 @@
 from . import layers, model, moe, ssm
+
+__all__ = ["layers", "model", "moe", "ssm"]

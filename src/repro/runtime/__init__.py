@@ -1,2 +1,5 @@
 from . import checkpoint, elastic, fault
 from .fault import FaultTolerantLoop, Preemption, StragglerMonitor
+
+__all__ = ["checkpoint", "elastic", "fault", "FaultTolerantLoop",
+           "Preemption", "StragglerMonitor"]

@@ -4,7 +4,6 @@ drives these from examples/serve_lm.py; the dry-run lowers them for the
 decode_32k / long_500k cells."""
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

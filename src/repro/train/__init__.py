@@ -1,3 +1,7 @@
 from .data import DataConfig, DataPipeline, synthetic_batch
 from .optimizer import OptConfig, apply_updates, init_opt_state
 from .train_step import lm_loss, loss_fn, make_eval_step, make_train_step
+
+__all__ = ["DataConfig", "DataPipeline", "synthetic_batch", "OptConfig",
+           "apply_updates", "init_opt_state", "lm_loss", "loss_fn",
+           "make_eval_step", "make_train_step"]

@@ -13,7 +13,6 @@ pod in the training state (shape [n_pods, ...] per leaf).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

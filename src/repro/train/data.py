@@ -13,7 +13,7 @@ uniform-entropy loss floor).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,250 @@
+"""The repro.api facade: solver-parity vs every legacy entrypoint,
+precomputed/callable metrics, out-of-sample predict (Pallas vs jnp),
+and the FitReport/fit_predict conventions."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import (KMedoids, available_metrics, available_solvers,
+                       register_solver)
+from repro.api import registry as api_registry
+from repro.core import (BanditPAM, FitReport, clara, clarans, datasets,
+                        fasterpam, pairwise, pam, resolve_metric, total_loss,
+                        voronoi_iteration)
+
+N, K = 300, 3
+
+# solver name -> (facade solver_params, equivalent legacy call)
+LEGACY = {
+    "banditpam": ({}, lambda d: BanditPAM(K, metric="l2", seed=0).fit(d)),
+    "banditpam_pp": ({}, lambda d: BanditPAM(K, metric="l2", seed=0,
+                                             reuse="pic").fit(d)),
+    "pam": ({}, lambda d: pam(d, K, metric="l2", fastpam1=False)),
+    "fastpam1": ({}, lambda d: pam(d, K, metric="l2", fastpam1=True)),
+    "fasterpam": ({}, lambda d: fasterpam(d, K, metric="l2", seed=0)),
+    "clara": ({}, lambda d: clara(d, K, metric="l2", seed=0)),
+    "clarans": (dict(max_neighbors=60),
+                lambda d: clarans(d, K, metric="l2", seed=0,
+                                  max_neighbors=60)),
+    "voronoi": ({}, lambda d: voronoi_iteration(d, K, metric="l2", seed=0)),
+}
+
+
+@pytest.fixture(scope="module")
+def data():
+    return datasets.mnist_like(N, seed=11)
+
+
+def test_every_registered_solver_is_covered():
+    assert set(LEGACY) == set(available_solvers())
+
+
+@pytest.mark.parametrize("solver", sorted(LEGACY))
+def test_solver_parity_with_legacy_entrypoint(solver, data):
+    """KMedoids(solver=s).fit must be evaluation-for-evaluation identical
+    to the legacy entrypoint: same medoids, loss, and ledger."""
+    params, legacy_fn = LEGACY[solver]
+    est = KMedoids(K, solver=solver, metric="l2", seed=0, **params).fit(data)
+    legacy = legacy_fn(data)
+    assert isinstance(est.report_, FitReport)
+    assert np.array_equal(np.sort(est.medoids_),
+                          np.sort(np.asarray(legacy.medoids)))
+    assert est.loss_ == pytest.approx(legacy.loss, rel=1e-6)
+    assert est.report_.distance_evals == legacy.distance_evals
+    assert est.report_.cached_evals == legacy.cached_evals
+    assert est.report_.solver == solver
+    # every solver's itemised ledger must account for its fresh evals
+    fresh = sum(v for ph, v in est.report_.evals_by_phase.items()
+                if not ph.endswith("_cached"))
+    assert fresh == est.report_.distance_evals
+    # in-sample labels: right shape, medoids label themselves
+    assert est.labels_.shape == (N,)
+    med_order = np.asarray(est.medoids_)
+    assert np.array_equal(est.labels_[med_order], np.arange(K))
+
+
+def test_fit_report_ledger_consistency(data):
+    est = KMedoids(K, solver="banditpam_pp", metric="l2", seed=0).fit(data)
+    r = est.report_
+    ledger = r.ledger()
+    assert ledger["fresh"] == r.distance_evals
+    assert ledger["cached"] == r.cached_evals > 0
+    fresh = sum(v for ph, v in ledger["by_phase"].items()
+                if not ph.endswith("_cached"))
+    cached = sum(v for ph, v in ledger["by_phase"].items()
+                 if ph.endswith("_cached"))
+    assert (fresh, cached) == (ledger["fresh"], ledger["cached"])
+
+
+# ---------------------------------------------------------------------------
+# Metrics: precomputed + callable
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dissim(data):
+    return np.asarray(pairwise(data, data, metric="l2"))
+
+
+def test_precomputed_matches_feature_metric(data, dissim):
+    a = KMedoids(K, solver="pam", metric="l2").fit(data)
+    b = KMedoids(K, solver="pam", metric="precomputed").fit(dissim)
+    assert np.array_equal(a.medoids_, b.medoids_)
+    assert b.loss_ == pytest.approx(a.loss_, rel=1e-6)
+    assert np.array_equal(a.labels_, b.labels_)
+
+
+def test_precomputed_banditpam_tracks_pam(data, dissim):
+    b = KMedoids(K, solver="banditpam", metric="precomputed", seed=0
+                 ).fit(dissim)
+    p = KMedoids(K, solver="pam", metric="precomputed").fit(dissim)
+    assert np.array_equal(np.sort(b.medoids_), np.sort(p.medoids_))
+    # the bandit never recomputed a distance: the ledger still counts its
+    # algorithmic evaluations, but they were all matrix lookups
+    assert b.report_.distance_evals > 0
+
+
+def test_precomputed_out_of_sample(data, dissim):
+    est = KMedoids(K, solver="pam", metric="precomputed").fit(dissim)
+    ref = KMedoids(K, solver="pam", metric="l2").fit(data)
+    q = datasets.mnist_like(40, seed=5)
+    dq = np.asarray(pairwise(jnp.asarray(q), data, metric="l2"))
+    np.testing.assert_allclose(est.transform(dq),
+                               ref.transform(q, backend="jnp"), rtol=1e-6)
+    assert np.array_equal(est.predict(dq), ref.predict(q, backend="jnp"))
+
+
+def test_precomputed_legacy_misuse_fails_loudly(dissim):
+    """A raw (un-augmented) matrix through a legacy entrypoint must raise
+    at the first eager distance call, not silently gather garbage."""
+    with pytest.raises(ValueError, match="attach_index"):
+        pam(jnp.asarray(dissim), K, metric="precomputed")
+
+
+def test_converged_reporting_semantics(data):
+    # solvers with a real stopping criterion report it ...
+    assert KMedoids(K, solver="pam").fit(data).report_.converged
+    assert KMedoids(K, solver="voronoi", seed=0).fit(data).report_.converged
+    # ... budget-exhausting solvers honestly report False
+    r = KMedoids(K, solver="clarans", seed=0, max_neighbors=30).fit(data)
+    assert not r.report_.converged
+
+
+def test_precomputed_rejects_bad_shapes(data):
+    with pytest.raises(ValueError):
+        KMedoids(K, metric="precomputed").fit(data[:10, :20])
+    est = KMedoids(K, solver="pam", metric="precomputed").fit(
+        np.asarray(pairwise(data[:50], data[:50], metric="l2")))
+    with pytest.raises(ValueError):
+        est.transform(np.zeros((4, 7), np.float32))  # wrong n_fit
+
+
+def test_callable_metric_autoregisters():
+    def manhattan(x, y):
+        return jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+
+    small = datasets.hoc4_like(150, seed=0)
+    a = KMedoids(2, solver="pam", metric=manhattan).fit(small)
+    b = KMedoids(2, solver="pam", metric="l1").fit(small)
+    assert np.array_equal(a.medoids_, b.medoids_)
+    assert a.loss_ == pytest.approx(b.loss_, rel=1e-5)
+    # idempotent resolution under a stable registered name
+    name = resolve_metric(manhattan)
+    assert resolve_metric(manhattan) == name
+    assert name in available_metrics()
+    assert a.report_.metric == name
+
+
+# ---------------------------------------------------------------------------
+# Out-of-sample predict/transform: Pallas vs jnp parity, chunking
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fitted(data):
+    return KMedoids(K, solver="fastpam1", metric="l2").fit(data)
+
+
+def test_predict_pallas_jnp_parity(fitted):
+    q = datasets.mnist_like(64, seed=3)
+    tp = fitted.transform(q, backend="pallas")
+    tj = fitted.transform(q, backend="jnp")
+    assert tp.shape == tj.shape == (64, K)
+    np.testing.assert_allclose(tp, tj, rtol=2e-4, atol=2e-3)
+    assert np.array_equal(fitted.predict(q, backend="pallas"),
+                          fitted.predict(q, backend="jnp"))
+
+
+def test_predict_chunking_is_invisible(data, fitted):
+    q = datasets.mnist_like(45, seed=4)
+    chunked = KMedoids(K, solver="fastpam1", metric="l2",
+                       predict_chunk=7).fit(data)
+    # chunk boundaries change XLA's matmul tiling, so equality is to ulps
+    np.testing.assert_allclose(chunked.transform(q, backend="jnp"),
+                               fitted.transform(q, backend="jnp"),
+                               rtol=1e-5, atol=1e-5)
+    assert np.array_equal(chunked.predict(q, backend="jnp"),
+                          fitted.predict(q, backend="jnp"))
+
+
+def test_fit_transform_and_train_labels_agree(data, fitted):
+    t = fitted.transform(data, backend="jnp")
+    assert np.array_equal(np.argmin(t, axis=1), fitted.labels_)
+    ft = KMedoids(K, solver="fastpam1", metric="l2").fit_transform(data)
+    np.testing.assert_allclose(ft, t, rtol=1e-6)
+
+
+def test_predict_input_validation(fitted):
+    with pytest.raises(ValueError):
+        fitted.transform(np.zeros((4, 9), np.float32))  # wrong feature dim
+    with pytest.raises(ValueError):
+        fitted.transform(np.zeros((4,), np.float32))    # not 2-D
+    with pytest.raises(ValueError):
+        fitted.transform(np.zeros((4, 784), np.float32), backend="bogus")
+    with pytest.raises(ValueError):
+        KMedoids(K).predict(np.zeros((4, 784), np.float32))  # not fitted
+
+
+# ---------------------------------------------------------------------------
+# Conventions: fit_predict shapes, registry surface, constructor errors
+# ---------------------------------------------------------------------------
+
+def test_facade_fit_predict_returns_labels_only(data):
+    est = KMedoids(K, solver="voronoi", metric="l2", seed=0)
+    labels = est.fit_predict(data)
+    assert isinstance(labels, np.ndarray) and labels.shape == (N,)
+    assert np.array_equal(labels, est.labels_)
+
+
+def test_legacy_fit_predict_warns_about_tuple_shape(data):
+    with pytest.warns(FutureWarning, match="fit_predict"):
+        res, labels = BanditPAM(2, metric="l2", seed=0).fit_predict(data[:80])
+    assert isinstance(res, FitReport)
+    assert labels.shape == (80,)
+
+
+def test_unknown_solver_and_metric_fail_fast(data):
+    with pytest.raises(KeyError, match="unknown solver"):
+        KMedoids(K, solver="nope").fit(data)
+    with pytest.raises(KeyError, match="unknown metric"):
+        KMedoids(K, metric="nope").fit(data)
+    with pytest.raises(ValueError):
+        KMedoids(0)
+    with pytest.raises(ValueError):
+        KMedoids(K).fit(data[:K])  # need n > k
+
+
+def test_register_custom_solver(data):
+    def firstk(d, k, *, metric, seed, **params):
+        med = np.arange(k)
+        loss = float(total_loss(jnp.asarray(d), jnp.arange(k), metric=metric))
+        return FitReport(medoids=med, loss=loss)
+
+    register_solver("firstk_test", firstk)
+    try:
+        assert "firstk_test" in available_solvers()
+        est = KMedoids(K, solver="firstk_test", metric="l2").fit(data)
+        assert np.array_equal(est.medoids_, np.arange(K))
+        assert est.labels_.shape == (N,)
+        assert est.report_.solver == "firstk_test"
+    finally:
+        del api_registry._SOLVERS["firstk_test"]

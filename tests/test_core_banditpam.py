@@ -1,8 +1,7 @@
 """Core behaviour: BanditPAM tracks PAM's trajectory (Theorems 1-2 claims)."""
-import numpy as np
 import pytest
 
-from repro.core import BanditPAM, pam, total_loss, clara, clarans, voronoi_iteration
+from repro.core import BanditPAM, pam, clara, clarans, voronoi_iteration
 from repro.core import datasets
 import jax.numpy as jnp
 

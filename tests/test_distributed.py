@@ -11,8 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.distributed.compression import (dequantize_int8, init_residuals,
-                                           quantize_int8)
+from repro.distributed.compression import dequantize_int8, quantize_int8
 
 # The mesh axis_types / top-level shard_map API needs jax >= 0.6; the pure
 # compression-math tests below run everywhere.

@@ -2,7 +2,6 @@
 one forward + one train step on CPU, asserting shapes and no NaNs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config, get_reduced, SHAPES

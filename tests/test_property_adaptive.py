@@ -8,7 +8,7 @@ pytest.importorskip("hypothesis")  # optional [test] extra; skip, don't die
 from hypothesis import given, settings, strategies as st
 
 from repro.core.adaptive import adaptive_search
-from repro.core.banditpam import _swap_batch_stats, _swap_terms, medoid_cache
+from repro.core.banditpam import _swap_batch_stats, medoid_cache
 from repro.core.distances import get_metric
 
 

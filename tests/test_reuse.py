@@ -1,7 +1,6 @@
 """BanditPAM++ SWAP-phase reuse engine (reuse="pic"): medoid parity with
 reuse="none", the fresh/cached distance-evaluation ledger, and the
 FasterPAM eager-swap loss-parity reference."""
-import numpy as np
 import pytest
 
 from repro.core import BanditPAM, datasets, fasterpam, pam

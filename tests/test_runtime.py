@@ -1,7 +1,5 @@
 """Fault-tolerance substrate: checkpoint/restore, resume, preemption,
 straggler detection, elastic re-mesh planning."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
