@@ -1,0 +1,100 @@
+"""Core-engine wall-clock sweep: per-solver × stats-backend × driver,
+median of >= 3 reps at fixed (n, k), alongside the algorithmic ledger.
+
+``benchmarks/run.py --json`` serialises this as ``BENCH_core.json`` (a CI
+artifact next to ``BENCH_solvers.json``), making the engine's perf
+trajectory measurable in-repo.  Each bandit row carries per-phase
+wall-clock medians (``FitReport.wall_by_phase``); the ``stepped`` driver
+rows are the pre-refactor host-orchestrated baseline (one dispatch + one
+host sync per sub-step, same math), so the fused/stepped delta IS the
+device-residency win measured in the same run environment.
+
+On CPU the Pallas backend runs in interpret mode (orders of magnitude
+slow), so the backend axis defaults to ``("jnp",)`` off-accelerator;
+set REPRO_BENCH_PALLAS=1 to force the kernel rows.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+
+import jax
+
+from repro.api import KMedoids, default_params
+
+from repro.core import datasets
+
+from .common import FULL, emit, timed
+
+# The engine rows: the paper solver and the reuse engine, fused vs stepped.
+SOLVERS = ("banditpam", "banditpam_pp")
+REPS = 5 if FULL else 3
+
+
+def _backends():
+    if jax.default_backend() != "cpu" or os.environ.get(
+            "REPRO_BENCH_PALLAS", "0") == "1":
+        return ("jnp", "pallas")
+    return ("jnp",)
+
+
+def _median_phase(reports, phase):
+    return round(statistics.median(
+        r.wall_by_phase.get(phase, 0.0) for r in reports), 4)
+
+
+def sweep(n=None, k=5, metric="l2", reps=REPS, solvers=SOLVERS):
+    if n is None:
+        n = 2000 if FULL else 600
+    data = datasets.make("mnist_like", n, seed=0)
+    rows = {}
+    for s in solvers:
+        for backend in _backends():
+            for fused in (True, False):
+                params = {**default_params(s), "backend": backend,
+                          "fused": fused}
+                walls, reports = [], []
+                for _ in range(max(3, int(reps))):
+                    est, wall = timed(lambda: KMedoids(
+                        k, solver=s, metric=metric, seed=0,
+                        **params).fit(data))
+                    walls.append(wall)
+                    reports.append(est.report_)
+                r = reports[-1]
+                name = f"{s}[{backend},{'fused' if fused else 'stepped'}]"
+                rows[name] = {
+                    "solver": s,
+                    "backend": backend,
+                    "engine": "fused" if fused else "stepped",
+                    "reps": len(walls),
+                    "wall_s_median": round(statistics.median(walls), 4),
+                    "wall_s_build_median": _median_phase(reports, "build"),
+                    "wall_s_swap_median": _median_phase(reports, "swap"),
+                    "loss": float(r.loss),
+                    "n_swaps": int(r.n_swaps),
+                    "ledger": r.ledger(),
+                }
+                emit(f"core_{name}_n{n}",
+                     rows[name]["wall_s_median"] * 1e6,
+                     f"build={rows[name]['wall_s_build_median']};"
+                     f"swap={rows[name]['wall_s_swap_median']};"
+                     f"fresh={r.distance_evals};cached={r.cached_evals}")
+    return {"bench": "core", "n": int(n), "k": int(k), "metric": metric,
+            "device": jax.default_backend(), "rows": rows}
+
+
+def write_json(path="BENCH_core.json", **kw) -> str:
+    payload = sweep(**kw)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    emit("core_json_written", 0.0, path)
+    return path
+
+
+def run():
+    sweep()
+
+
+if __name__ == "__main__":
+    run()

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import datasets
-from repro.core.banditpam import _build_g, _build_search
+from repro.core.banditpam import _build_g, _build_step_jit
 from repro.core.distances import get_metric
 
 from .common import FULL, emit
@@ -35,8 +35,10 @@ def sigma_distribution(n=2000, k=5, seed=0):
                      float(np.max(sig))))
         emit(f"appfig1_sigma_step{step}", 0.0,
              f"min={rows[-1][1]:.4f};median={rows[-1][2]:.4f};max={rows[-1][3]:.4f}")
-        sr = _build_search(data, dnear, med_mask, sub, metric="l2",
-                           batch_size=100, delta=1.0 / (1000 * n))
+        sr = _build_step_jit(data, dnear, med_mask, sub, None, 0, None,
+                             backend="jnp", metric="l2", batch_size=100,
+                             delta=1.0 / (1000 * n), sampling="permutation",
+                             baseline="none", mode="none", free_rounds=0)
         m = int(sr.best)
         med_mask = med_mask.at[m].set(True)
         dnear = jnp.minimum(dnear, dist(data[m][None], data)[0])

@@ -1,19 +1,25 @@
 # repro.api — the estimator facade: one sklearn-style KMedoids fronting
 # every registered k-medoids solver, with out-of-sample inference and the
-# unified FitReport ledger.
+# unified FitReport ledger.  The stats-backend registry (repro.core.engine)
+# is re-exported here so backend selection/extension lives on the same
+# surface as solver and metric registration.
 from repro.core.distances import (attach_index, available_metrics,
                                   register_metric, resolve_metric)
+from repro.core.engine import (available_stats_backends, get_stats_backend,
+                               register_stats_backend, resolve_stats_backend)
 from repro.core.report import FitReport
 
 from .estimator import KMedoids
 from .predict import PALLAS_METRICS, medoid_distances, resolve_backend
 from .registry import (available_solvers, default_params, get_solver,
-                       register_solver)
+                       register_solver, solver_accepts_backend)
 
 __all__ = [
     "KMedoids", "FitReport", "register_solver", "get_solver",
-    "available_solvers", "default_params", "register_metric",
-    "available_metrics",
+    "available_solvers", "default_params", "solver_accepts_backend",
+    "register_metric", "available_metrics",
     "resolve_metric", "attach_index", "medoid_distances", "resolve_backend",
     "PALLAS_METRICS",
+    "register_stats_backend", "get_stats_backend",
+    "available_stats_backends", "resolve_stats_backend",
 ]

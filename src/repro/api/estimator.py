@@ -38,7 +38,7 @@ from repro.core.banditpam import medoid_cache
 from repro.core.distances import attach_index, resolve_metric
 
 from .predict import DEFAULT_CHUNK, medoid_distances
-from .registry import get_solver
+from .registry import get_solver, solver_accepts_backend
 
 
 class KMedoids:
@@ -49,6 +49,11 @@ class KMedoids:
       solver: registered solver name (``available_solvers()``).
       metric: registered metric name, callable, or ``"precomputed"``.
       seed: forwarded to stochastic solvers (deterministic ones ignore it).
+      backend: ``"auto"`` | ``"pallas"`` | ``"jnp"`` (or any registered
+        stats backend) — which g-statistics path the *fit* runs through
+        (``repro.core.engine``).  Forwarded to solvers registered with
+        ``accepts_backend=True`` (the bandit solvers); other solvers
+        require the default ``"auto"``.
       predict_backend: ``"auto"`` | ``"pallas"`` | ``"jnp"`` — which pairwise
         path scores out-of-sample points (overridable per call).
       predict_chunk: query rows per dispatch in predict/transform, bounding
@@ -58,7 +63,8 @@ class KMedoids:
     """
 
     def __init__(self, k: int, solver: str = "banditpam", metric="l2",
-                 seed: int = 0, predict_backend: str = "auto",
+                 seed: int = 0, backend: str = "auto",
+                 predict_backend: str = "auto",
                  predict_chunk: int = DEFAULT_CHUNK, **solver_params):
         if int(k) < 1:
             raise ValueError(f"k must be >= 1, got {k}")
@@ -66,6 +72,7 @@ class KMedoids:
         self.solver = solver
         self.metric = metric
         self.seed = int(seed)
+        self.backend = backend
         self.predict_backend = predict_backend
         self.predict_chunk = int(predict_chunk)
         self.solver_params = dict(solver_params)
@@ -93,8 +100,16 @@ class KMedoids:
             data = attach_index(X)                 # validates squareness
         else:
             data = jnp.asarray(X)
+        params = dict(self.solver_params)
+        if solver_accepts_backend(self.solver):
+            params.setdefault("backend", self.backend)
+        elif self.backend != "auto":
+            raise ValueError(
+                f"solver {self.solver!r} does not take a stats backend; "
+                f"backend={self.backend!r} only applies to solvers "
+                f"registered with accepts_backend=True")
         report = solver_fn(data, self.k, metric=metric_name, seed=self.seed,
-                           **self.solver_params)
+                           **params)
         medoids = np.asarray(report.medoids).astype(np.int64)
         # In-sample labels under the SAME metric the solver used (for
         # "precomputed" that is the matrix-lookup metric over `data`).

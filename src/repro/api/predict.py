@@ -13,10 +13,10 @@ Two backends compute the block:
 * ``"jnp"`` — ``repro.core.distances.pairwise`` (jit'd XLA).  Any
   registered metric, including user callables.
 
-``"auto"`` routes kernel-supported metrics through Pallas when a real
-accelerator backend is present and falls back to jnp otherwise (CPU
-interpret-mode is correct but orders of magnitude slower, so it is never
-auto-selected).
+``"auto"`` routes kernel-supported metrics through Pallas on TPU (the
+tiling the kernels are written for) and falls back to jnp everywhere
+else — CPU interpret-mode is correct but orders of magnitude slower, and
+non-TPU lowerings are unvalidated, so neither is ever auto-selected.
 """
 
 from __future__ import annotations
@@ -31,7 +31,7 @@ from repro.core.distances import pairwise
 from repro.kernels import ops
 
 # Metrics implemented by the Pallas pairwise kernel (kernels/pairwise.py).
-PALLAS_METRICS = ("l2", "l2sq", "l1", "cosine")
+PALLAS_METRICS = ops.KERNEL_METRICS
 
 DEFAULT_CHUNK = 8192
 
@@ -39,7 +39,9 @@ DEFAULT_CHUNK = 8192
 def resolve_backend(backend: Optional[str], metric: str) -> str:
     """Normalise a backend argument to {"pallas", "jnp"}."""
     if backend in (None, "auto"):
-        if metric in PALLAS_METRICS and jax.default_backend() != "cpu":
+        # TPU only: the kernels are TPU-tiled and unvalidated under other
+        # lowerings; "auto" never gambles the default path on them.
+        if metric in PALLAS_METRICS and jax.default_backend() == "tpu":
             return "pallas"
         return "jnp"
     if backend not in ("pallas", "jnp"):

@@ -30,10 +30,20 @@ from repro.core.report import FitReport
 Solver = Callable[..., FitReport]
 
 _SOLVERS: Dict[str, Solver] = {}
+_ACCEPTS_BACKEND: set = set()
 
 
-def register_solver(name: str, fn: Solver) -> None:
+def register_solver(name: str, fn: Solver, *,
+                    accepts_backend: bool = False) -> None:
+    """Register ``fn`` under ``name``.  ``accepts_backend=True`` declares
+    that the solver takes the ``backend=`` stats-backend kwarg
+    (``repro.core.engine``) — the facade only forwards ``KMedoids(backend=…)``
+    to solvers that opted in."""
     _SOLVERS[name] = fn
+    if accepts_backend:
+        _ACCEPTS_BACKEND.add(name)
+    else:
+        _ACCEPTS_BACKEND.discard(name)
 
 
 def get_solver(name: str) -> Solver:
@@ -44,6 +54,10 @@ def get_solver(name: str) -> Solver:
 
 def available_solvers():
     return sorted(_SOLVERS)
+
+
+def solver_accepts_backend(name: str) -> bool:
+    return name in _ACCEPTS_BACKEND
 
 
 # Solvers that accept the adaptive-search knobs (baseline / sampling /
@@ -102,8 +116,8 @@ def _voronoi(data, k, *, metric, seed, **params):
     return voronoi_iteration(data, k, metric=metric, seed=seed, **params)
 
 
-register_solver("banditpam", _banditpam)
-register_solver("banditpam_pp", _banditpam_pp)
+register_solver("banditpam", _banditpam, accepts_backend=True)
+register_solver("banditpam_pp", _banditpam_pp, accepts_backend=True)
 register_solver("pam", _pam)
 register_solver("fastpam1", _fastpam1)
 register_solver("fasterpam", _fasterpam)

@@ -3,7 +3,7 @@ vocab=32000, MoE 128 experts top-2 + dense residual MLP.
 [hf:Snowflake/snowflake-arctic-base]
 
 bf16 AdamW moments: fp32 states for 479B params exceed a 512-chip v5e
-pod-pair's HBM (DESIGN.md §Memory-fit)."""
+pod-pair's HBM (docs/design.md §Memory-fit)."""
 import dataclasses
 from .base import ArchConfig
 

@@ -4,7 +4,7 @@ Every assigned architecture gets one module defining ``CONFIG`` with the
 exact published numbers, plus ``reduced()`` — a same-family shrink for CPU
 smoke tests.  ``SHAPES`` defines the four input-shape cells; helpers below
 say which (arch x shape) cells are runnable (long_500k requires
-sub-quadratic attention state, DESIGN.md §Arch-applicability).
+sub-quadratic attention state, docs/design.md §Arch-applicability).
 """
 
 from __future__ import annotations
@@ -164,7 +164,7 @@ def supports_long_context(cfg: ArchConfig) -> bool:
 
 
 def cells(arch_id: str):
-    """The runnable shape cells for an arch (skips noted in DESIGN.md)."""
+    """The runnable shape cells for an arch (skips noted in docs/design.md)."""
     cfg = get_config(arch_id)
     out = []
     for s in SHAPES.values():

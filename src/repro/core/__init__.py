@@ -2,6 +2,9 @@
 # multi-armed bandits, plus the exact PAM oracles and quality baselines.
 from .adaptive import SearchResult, adaptive_search
 from .report import FitReport
+from .engine import (FitContext, available_stats_backends,
+                     get_stats_backend, register_stats_backend,
+                     resolve_stats_backend)
 from .banditpam import BanditPAM, FitResult, medoid_cache, total_loss
 from .distances import (attach_index, available_metrics, get_metric, pairwise,
                         register_metric, resolve_metric)
@@ -11,6 +14,8 @@ from . import datasets
 
 __all__ = [
     "SearchResult", "adaptive_search", "BanditPAM", "FitReport", "FitResult",
+    "FitContext", "available_stats_backends", "get_stats_backend",
+    "register_stats_backend", "resolve_stats_backend",
     "medoid_cache", "total_loss", "attach_index", "available_metrics",
     "get_metric", "pairwise", "register_metric", "resolve_metric",
     "PAMResult", "pam", "BaselineResult", "clara", "clarans", "fasterpam",

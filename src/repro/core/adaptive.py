@@ -4,7 +4,7 @@ A batched UCB / successive-elimination best-arm routine, recast for TPU:
 
 * The arm set is *static* — eliminated arms are masked, not removed, so the
   whole search is a single ``lax.while_loop`` with fixed shapes (hardware
-  adaptation #1 in DESIGN.md).  The *algorithmic* number of distance
+  adaptation #1 in docs/design.md).  The *algorithmic* number of distance
   evaluations (what the paper counts and what real hardware pays with the
   compacted execution) is tracked exactly via ``count_fn``.
 * Arm statistics are streamed: ``stats_fn`` returns per-arm batch *sums*,
@@ -52,7 +52,7 @@ driver that exploits this across swap iterations.
 
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +72,8 @@ class SearchResult(NamedTuple):
     n_evals_cached: jnp.ndarray  # uint32: evaluations served from a cache
     sums: jnp.ndarray        # [arms] final Σ g over the consumed prefix
     sqsums: jnp.ndarray      # [arms] final Σ g² over the consumed prefix
+    aux: Any = ()            # caller state threaded through the search carry
+    #                          (device PIC cache buffer + high-water mark)
 
 
 class _State(NamedTuple):
@@ -89,6 +91,7 @@ class _State(NamedTuple):
     n_evals: jnp.ndarray     # uint32 fresh distance evaluations
     n_cached: jnp.ndarray    # uint32 cache-served distance evaluations
     rounds: jnp.ndarray
+    aux: Any                 # caller state (see adaptive_search ``aux_init``)
 
 
 StatsFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray],
@@ -120,6 +123,7 @@ def adaptive_search(
     init_sums: Optional[jnp.ndarray] = None,
     init_sqsums: Optional[jnp.ndarray] = None,
     init_rounds=0,
+    aux_init: Any = None,
 ) -> SearchResult:
     """Run one best-arm identification (one BUILD assignment or one SWAP pick).
 
@@ -130,6 +134,16 @@ def adaptive_search(
         mask; ``lead`` is an arm index, only meaningful when ≥ 0; ``rnd``
         is the round index, letting the caller serve cached distance
         columns for warm rounds).
+      aux_init: optional caller state threaded through the search carry.
+        When given, ``stats_fn`` takes a fifth argument (the current aux)
+        and returns it, possibly updated, as a fourth output:
+        ``(ref_idx, w, lead, rnd, aux) -> (sums, sqsums, cross, aux)``.
+        This is how the device-resident PIC cache achieves write-through:
+        the ``[n, width]`` column buffer plus its high-water round count
+        ride the ``while_loop`` carry, and each fresh round's distance
+        block is stored from inside the loop — the recompute that a
+        host-side cache materialisation would pay is gone.  The final aux
+        is returned as ``SearchResult.aux``.
       perm / free_rounds: paper App 2.2 cache — reuse a FIXED reference
         permutation across calls; the first ``free_rounds`` rounds (a Python
         int or a traced int32 scalar) hit the caller's distance cache and
@@ -208,8 +222,13 @@ def adaptive_search(
             w = jnp.ones((B,), jnp.float32)
         b_eff = jnp.sum(w).astype(jnp.int32)
         b_eff_f = b_eff.astype(jnp.float32)
-        sums_b, sq_b, cross_b = stats_fn(ref_idx, w, jnp.maximum(s.lead, 0),
-                                         s.rounds)
+        if aux_init is None:
+            sums_b, sq_b, cross_b = stats_fn(ref_idx, w,
+                                             jnp.maximum(s.lead, 0), s.rounds)
+            aux = s.aux
+        else:
+            sums_b, sq_b, cross_b, aux = stats_fn(
+                ref_idx, w, jnp.maximum(s.lead, 0), s.rounds, s.aux)
 
         # ---- raw statistics (paper) ----
         sums = s.sums + sums_b
@@ -261,7 +280,7 @@ def adaptive_search(
         n_cached = s.n_cached + (1 - fresh) * cost
         return _State(key, sums, sqsums, sigma, active, n_new, lead,
                       d_sums, d_sq, sigma_d, n_post, n_evals, n_cached,
-                      s.rounds + 1)
+                      s.rounds + 1, aux)
 
     zeros = jnp.zeros((n_arms,), jnp.float32)
     if init_sums is not None:
@@ -285,7 +304,7 @@ def adaptive_search(
         d_sums=zeros, d_sq=zeros,
         sigma_d=jnp.full((n_arms,), jnp.inf, jnp.float32),
         n_post=jnp.int32(0), n_evals=jnp.uint32(0), n_cached=jnp.uint32(0),
-        rounds=rounds0,
+        rounds=rounds0, aux=() if aux_init is None else aux_init,
     )
     final = jax.lax.while_loop(cond, body, init)
 
@@ -316,4 +335,5 @@ def adaptive_search(
                         rounds=final.rounds, used_exact=used_exact,
                         n_survivors=n_survivors,
                         n_evals_cached=final.n_cached,
-                        sums=final.sums, sqsums=final.sqsums)
+                        sums=final.sums, sqsums=final.sqsums,
+                        aux=final.aux)

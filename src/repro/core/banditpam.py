@@ -7,32 +7,49 @@ Faithful to the paper:
   ``g_x(y) = d(x,y)`` (Eq. 4 with an empty medoid set).
 * SWAP (Eq. 7 + Appendix Eq. 12 / FastPAM1): arms = (medoid m, candidate x)
   pairs.  One distance ``d(x,y)`` serves all k arms ``(·, x)`` via the cached
-  ``d₁, d₂`` and cluster assignment — evaluated here as a base term plus a
-  one-hot matmul correction, which never materialises a ``[k, n, B]`` tensor:
-
-      g_{m,x}(y) = −d₁(y) + 1[y∉C_m]·min(d₁(y), d(x,y))
-                           + 1[y∈C_m]·min(d₂(y), d(x,y))
-                 = base_x(y) + 1[y∈C_m]·corr_x(y)
-      base_x(y) = min(d₁(y), d(x,y)) − d₁(y)
-      corr_x(y) = min(d₂(y), d(x,y)) − min(d₁(y), d(x,y))
-
+  ``d₁, d₂`` and cluster assignment — evaluated as a base term plus a
+  one-hot matmul correction (``engine._swap_batch_stats`` / the fused
+  Pallas kernels), which never materialises a ``[k, n, B]`` tensor.
 * σ_x re-estimated from the first batch of every Algorithm 1 call (Eq. 11,
   Appendix 1.2), B = 100, δ = 1/(1000·|S_tar|) by default (§3.2).
 * SWAP iterations repeat until the chosen swap no longer improves the exact
   loss, with a hard cap T (paper §4 Remark 1).
 
-Distance-evaluation accounting (the paper's headline metric) is algorithmic:
-each bandit round pays ``#active-arms × B`` in BUILD and
-``#distinct-active-candidates × B`` in SWAP (FastPAM1 sharing), cache
-(re)computation pays ``n·k``, and the d_near update after each BUILD
+Device-resident driver (docs/design.md hardware adaptation #5): the
+g-statistics are computed through a pluggable :class:`~repro.core.engine`
+``StatsBackend`` (``backend="auto"/"pallas"/"jnp"``), and the control flow
+is structured so the hot path never leaves the accelerator:
+
+* BUILD is ONE jit dispatch: a ``lax.fori_loop`` over the k medoid
+  selections with the ``adaptive_search`` while-loop inside and
+  ``d_near`` / the medoid mask as loop carry — no per-medoid host sync,
+  no per-medoid retrace.
+* Each SWAP iteration is ONE fused device step (medoid-cache refresh +
+  carried-moment repair + bandit search + candidate loss); only the
+  accept/converge decision reads a scalar back on host.
+* The BanditPAM++ PIC cache is a preallocated, padded ``[n, width]``
+  device buffer threaded through the search carry with stats-side
+  write-through: each fresh distance column is stored by the very round
+  that computes it, so nothing is ever recomputed for the cache and the
+  host never touches a distance column.
+
+``fused=False`` keeps the host-orchestrated driver (one dispatch per
+medoid / per swap sub-step, host syncs between) built from the same
+pieces — the in-run baseline ``benchmarks/core_bench.py`` measures the
+fusion against.
+
+Distance-evaluation accounting (the paper's headline metric) is algorithmic
+and backend-independent: each bandit round pays ``#active-arms × B`` in
+BUILD and ``#distinct-active-candidates × B`` in SWAP (FastPAM1 sharing),
+cache (re)computation pays ``n·k``, and the d_near update after each BUILD
 assignment pays ``n`` — exactly the ledger of the reference implementation.
 
 Beyond the paper, ``BanditPAM(reuse="pic")`` enables the BanditPAM++
 (Tiwari et al. 2023) SWAP-phase reuse engine:
 
 * **PIC** — every search samples the SAME fixed reference permutation, and
-  the distance columns it consumes are materialised once into a lazily
-  grown cache (``_PicCache``); later searches replay those rounds for free.
+  the distance columns it consumes are materialised once (write-through
+  into the device cache); later searches replay those rounds for free.
 * **Virtual arms** — per-arm Σg / Σg² from swap iteration *t* are carried
   into iteration *t+1* and repaired only where the accepted swap moved a
   reference point's (d1, d2, assign); per changed point that touches the
@@ -49,8 +66,9 @@ repairs.  ``reuse="none"`` reproduces the original ledger exactly.
 from __future__ import annotations
 
 import functools
+import time
 import warnings
-from typing import List, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,282 +76,23 @@ import numpy as np
 
 from .adaptive import SearchResult, adaptive_search
 from .distances import get_metric
+from .engine import (_EXACT_CHUNK, _build_g, _ref_chunks, _swap_batch_stats,
+                     _swap_terms, FitContext, cache_read_or_write,
+                     get_stats_backend, medoid_cache, pic_fresh_evals,
+                     resolve_stats_backend, total_loss)
 from .report import FitReport
 
-_EXACT_CHUNK = 512  # reference-chunk size for exact fallback passes
+__all__ = ["BanditPAM", "FitResult", "medoid_cache", "total_loss"]
+
+# Re-exported for the siblings (pam, distributed) and external callers that
+# historically imported the shared math from here; it now lives in engine.
+_ = (SearchResult, _EXACT_CHUNK, _build_g, _ref_chunks, _swap_batch_stats,
+     _swap_terms)
 
 
 # ---------------------------------------------------------------------------
-# Shared cache / loss helpers
+# BanditPAM++ carried-moment repair (virtual arms)
 # ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("metric",))
-def medoid_cache(data: jnp.ndarray, medoids: jnp.ndarray, *, metric: str
-                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """d1 (nearest-medoid dist), d2 (second nearest), assignment; [n] each."""
-    dmat = get_metric(metric)(data, data[medoids])          # [n, k]
-    assign = jnp.argmin(dmat, axis=1).astype(jnp.int32)
-    d1 = jnp.min(dmat, axis=1)
-    dmat2 = dmat.at[jnp.arange(dmat.shape[0]), assign].set(jnp.inf)
-    d2 = jnp.min(dmat2, axis=1)
-    return d1, d2, assign
-
-
-@functools.partial(jax.jit, static_argnames=("metric",))
-def total_loss(data: jnp.ndarray, medoids: jnp.ndarray, *, metric: str) -> jnp.ndarray:
-    dmat = get_metric(metric)(data, data[medoids])
-    return jnp.sum(jnp.min(dmat, axis=1))
-
-
-def _ref_chunks(n_ref: int, chunk: int) -> Tuple[np.ndarray, np.ndarray]:
-    """Static index/weight tiling of [0, n_ref) into equal chunks."""
-    n_chunks = -(-n_ref // chunk)
-    idx = np.arange(n_chunks * chunk)
-    w = (idx < n_ref).astype(np.float32)
-    idx = np.minimum(idx, n_ref - 1)
-    return idx.reshape(n_chunks, chunk), w.reshape(n_chunks, chunk)
-
-
-# ---------------------------------------------------------------------------
-# BUILD
-# ---------------------------------------------------------------------------
-
-def _build_g(dxy: jnp.ndarray, dnear_b: jnp.ndarray) -> jnp.ndarray:
-    """Eq. 6 with the Eq. 4 special-case for the first assignment."""
-    dn = dnear_b[None, :]
-    return jnp.where(jnp.isinf(dn), dxy, jnp.minimum(dxy - dn, 0.0))
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("metric", "batch_size", "delta", "sampling",
-                                    "baseline"))
-def _build_search(data: jnp.ndarray, dnear: jnp.ndarray, med_mask: jnp.ndarray,
-                  key: jax.Array, *, metric: str, batch_size: int,
-                  delta: float, sampling: str = "permutation",
-                  baseline: str = "none", perm=None, dwarm=None,
-                  free_rounds=0) -> SearchResult:
-    n = data.shape[0]
-    dist = get_metric(metric)
-
-    def stats_fn(ref_idx, w, lead, rnd):
-        if dwarm is None:
-            dxy = dist(data, data[ref_idx])
-        else:
-            # paper App 2.2 cache: warm rounds read precomputed distance
-            # columns (same fixed permutation across every search call)
-            dxy = jax.lax.cond(
-                rnd < free_rounds,
-                lambda _: jax.lax.dynamic_slice_in_dim(
-                    dwarm, rnd * batch_size, batch_size, 1),
-                lambda _: dist(data, data[ref_idx]), None)
-        g = _build_g(dxy, dnear[ref_idx]) * w[None, :]             # [n, B]
-        cross = g @ g[lead]
-        return jnp.sum(g, axis=1), jnp.sum(g * g, axis=1), cross
-
-    def exact_fn():
-        idx_np, w_np = _ref_chunks(n, _EXACT_CHUNK)
-        idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
-
-        def body(acc, iw):
-            i, wc = iw
-            g = _build_g(dist(data, data[i]), dnear[i])
-            return acc + jnp.sum(g * wc[None, :], axis=1), None
-
-        sums, _ = jax.lax.scan(body, jnp.zeros((n,), jnp.float32), (idx, w))
-        return sums / n
-
-    return adaptive_search(key, stats_fn=stats_fn, exact_fn=exact_fn,
-                           n_arms=n, n_ref=n, batch_size=batch_size,
-                           delta=delta, active_init=jnp.logical_not(med_mask),
-                           sampling=sampling, baseline=baseline, perm=perm,
-                           free_rounds=free_rounds)
-
-
-# ---------------------------------------------------------------------------
-# SWAP (FastPAM1 fused form)
-# ---------------------------------------------------------------------------
-
-def _swap_terms(dxy: jnp.ndarray, d1_b: jnp.ndarray, d2_b: jnp.ndarray
-                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    base = jnp.minimum(dxy, d1_b[None, :]) - d1_b[None, :]
-    corr = jnp.minimum(dxy, d2_b[None, :]) - jnp.minimum(dxy, d1_b[None, :])
-    return base, corr
-
-
-def _swap_batch_stats(dxy, d1_b, d2_b, a_b, w, k, lead=None):
-    """Per-arm (m·n + x) sums, square-sums (and optional leader cross-sums)
-    over a reference batch.
-
-    g = base + 1[assign==m]·corr  ⇒
-      Σ g        = Σ base + Σ_{y∈C_m} corr
-      Σ g²       = Σ base² + Σ_{y∈C_m} (2·base·corr + corr²)
-      Σ g·g_lead = Σ base·g_lead + Σ_{y∈C_m} corr·g_lead
-    The C_m-restricted sums are one-hot matmuls (MXU-shaped).
-    """
-    n = dxy.shape[0]
-    base, corr = _swap_terms(dxy, d1_b, d2_b)
-    # weights are {0,1} (padding mask), so w² = w and masking base once is
-    # enough for every product below.
-    base = base * w[None, :]
-    onehot = jax.nn.one_hot(a_b, k, dtype=dxy.dtype) * w[:, None]   # [B, k]
-    sums = jnp.sum(base, axis=1)[None, :] + (corr @ onehot).T       # [k, n]
-    sq_base = jnp.sum(base * base, axis=1)
-    sq_cross = 2.0 * base * corr + corr * corr
-    sqsums = sq_base[None, :] + (sq_cross @ onehot).T
-    if lead is None:
-        return sums.reshape(-1), sqsums.reshape(-1)
-    m_l, x_l = lead // n, lead % n
-    g_lead = base[x_l] + onehot[:, m_l] * corr[x_l]                 # [B], w-masked
-    cross = (base @ g_lead)[None, :] + ((corr * g_lead[None, :]) @ onehot).T
-    return sums.reshape(-1), sqsums.reshape(-1), cross.reshape(-1)
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("metric", "batch_size", "delta", "k",
-                                    "sampling", "baseline", "early_stop"))
-def _swap_search(data: jnp.ndarray, d1: jnp.ndarray, d2: jnp.ndarray,
-                 assign: jnp.ndarray, med_mask: jnp.ndarray, key: jax.Array,
-                 *, metric: str, batch_size: int, delta: float, k: int,
-                 sampling: str = "permutation", baseline: str = "none",
-                 early_stop: bool = False, perm=None, dwarm=None,
-                 free_rounds=0, init_sums=None, init_sqsums=None,
-                 init_rounds=0) -> SearchResult:
-    n = data.shape[0]
-    dist = get_metric(metric)
-
-    def stats_fn(ref_idx, w, lead, rnd):
-        if dwarm is None:
-            dxy = dist(data, data[ref_idx])                  # [n, B]
-        else:
-            dxy = jax.lax.cond(
-                rnd < free_rounds,
-                lambda _: jax.lax.dynamic_slice_in_dim(
-                    dwarm, rnd * batch_size, batch_size, 1),
-                lambda _: dist(data, data[ref_idx]), None)
-        return _swap_batch_stats(dxy, d1[ref_idx], d2[ref_idx],
-                                 assign[ref_idx], w, k, lead=lead)
-
-    def exact_fn():
-        idx_np, w_np = _ref_chunks(n, _EXACT_CHUNK)
-        idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
-
-        def body(acc, iw):
-            i, wc = iw
-            dxy = dist(data, data[i])
-            s, _ = _swap_batch_stats(dxy, d1[i], d2[i], assign[i], wc, k)
-            return acc + s, None
-
-        sums, _ = jax.lax.scan(body, jnp.zeros((k * n,), jnp.float32), (idx, w))
-        return sums / n
-
-    # Candidates that are already medoids are not valid swap targets.
-    active0 = jnp.tile(jnp.logical_not(med_mask)[None, :], (k, 1)).reshape(-1)
-
-    def count_fn(active):
-        # FastPAM1: one distance per (x, y) pair serves all k arms (·, x).
-        any_x = jnp.any(active.reshape(k, n), axis=0)
-        return jnp.sum(any_x.astype(jnp.uint32))
-
-    return adaptive_search(key, stats_fn=stats_fn, exact_fn=exact_fn,
-                           n_arms=k * n, n_ref=n, batch_size=batch_size,
-                           delta=delta, active_init=active0, count_fn=count_fn,
-                           sampling=sampling, baseline=baseline,
-                           stop_when_positive=early_stop, perm=perm,
-                           free_rounds=free_rounds, init_sums=init_sums,
-                           init_sqsums=init_sqsums, init_rounds=init_rounds)
-
-
-# ---------------------------------------------------------------------------
-# BanditPAM++ SWAP-phase reuse engine (virtual arms + PIC)
-# ---------------------------------------------------------------------------
-
-class _PicCache:
-    """Permutation-invariant cache (BanditPAM++, Tiwari et al. 2023).
-
-    One FIXED random permutation of the reference set is shared by every
-    BUILD/SWAP search of a fit, and the distance columns ``d(·, perm[j])``
-    consumed by any search are materialised once and kept.  Rounds below
-    the high-water mark are then served to ``adaptive_search`` as *cached*
-    rounds (zero fresh evaluations) by every later search — valid because
-    the columns depend only on the data and the permutation, never on the
-    evolving medoid set.
-
-    The cache grows lazily in whole bandit rounds (unlike the upfront
-    ``cache_cols`` warm block, nothing is paid for rounds no search ever
-    reaches).  ``view()`` pads the width to a ``PAD_ROUNDS`` multiple so
-    jit re-traces at most every ``PAD_ROUNDS`` growth steps.
-    """
-
-    PAD_ROUNDS = 8
-
-    def __init__(self, data: jnp.ndarray, perm: jnp.ndarray, batch_size: int,
-                 metric: str):
-        self.data = data
-        self.metric = metric
-        self.B = int(batch_size)
-        n = int(data.shape[0])
-        self.n = n
-        self.n_rounds_max = -(-n // self.B)
-        total = self.n_rounds_max * self.B
-        perm_np = np.asarray(perm).astype(np.int32)
-        # Same tiling as adaptive_search: positions >= n are w=0 padding.
-        self.perm = jnp.asarray(perm_np)
-        self.perm_idx = jnp.asarray(np.tile(perm_np, -(-total // n))[:total])
-        self.perm_w = jnp.asarray((np.arange(total) < n).astype(np.float32))
-        self.hw_rounds = 0
-        self._cols = np.zeros((n, 0), np.float32)
-        self._view = None      # memoised device array
-        self._view_hw = 0      # rounds materialised into _view
-
-    def ensure(self, rounds: int) -> int:
-        """Materialise columns for rounds ``[hw, rounds)``; returns the fresh
-        distance evaluations paid (n per new effective reference position —
-        a full column, which is what makes the position free for *every* arm
-        of every later search).
-
-        Note the ledger counts these evaluations once, but on this jit'd
-        driver the wall-clock compute for a newly reached round is ~2×: the
-        search already computed the column inside ``stats_fn`` and cannot
-        write it out of the ``while_loop``, so materialisation recomputes
-        it here.  A TPU deployment with kernel-side write-through would pay
-        it once, which is what the algorithmic ledger models."""
-        rounds = min(int(rounds), self.n_rounds_max)
-        if rounds <= self.hw_rounds:
-            return 0
-        lo, hi = self.hw_rounds * self.B, rounds * self.B
-        pos = np.arange(lo, hi)
-        eff = pos < self.n
-        new = np.zeros((self.n, hi - lo), np.float32)
-        if eff.any():
-            idx = np.asarray(self.perm_idx)[lo:hi][eff]
-            cols = get_metric(self.metric)(self.data, self.data[jnp.asarray(idx)])
-            new[:, eff] = np.asarray(cols)
-        self._cols = np.concatenate([self._cols, new], axis=1)
-        self.hw_rounds = rounds
-        return self.n * int(eff.sum())
-
-    def view(self) -> Tuple[jnp.ndarray, int]:
-        """(dwarm, free_rounds) for a search call, width-padded with zeros.
-
-        The device array is memoised: repeat calls are free, and growth
-        within the current padded width patches only the new column slice
-        on device (``.at[].set``) instead of re-uploading the whole cache —
-        a full host→device ship happens only when the width itself steps
-        to the next PAD_ROUNDS multiple."""
-        wr = min(-(-max(self.hw_rounds, 1) // self.PAD_ROUNDS)
-                 * self.PAD_ROUNDS, self.n_rounds_max)
-        width = wr * self.B
-        if self._view is None or self._view.shape[1] != width:
-            dwarm = np.zeros((self.n, width), np.float32)
-            dwarm[:, : self.hw_rounds * self.B] = self._cols
-            self._view = jnp.asarray(dwarm)
-            self._view_hw = self.hw_rounds
-        elif self._view_hw < self.hw_rounds:
-            lo, hi = self._view_hw * self.B, self.hw_rounds * self.B
-            self._view = self._view.at[:, lo:hi].set(self._cols[:, lo:hi])
-            self._view_hw = self.hw_rounds
-        return self._view, self.hw_rounds
-
 
 @functools.partial(jax.jit, static_argnames=("k",))
 def _carry_delta(cols: jnp.ndarray, pidx: jnp.ndarray, pw: jnp.ndarray,
@@ -368,6 +127,278 @@ def _carry_delta(cols: jnp.ndarray, pidx: jnp.ndarray, pw: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# BUILD
+# ---------------------------------------------------------------------------
+
+def _build_step(data, dnear, med_mask, key, dwarm, hw, perm, *, backend: str,
+                metric: str, batch_size: int, delta: float, sampling: str,
+                baseline: str, mode: str, free_rounds: int = 0
+                ) -> SearchResult:
+    """One BUILD medoid selection (one Algorithm 1 call).
+
+    ``mode`` is the cache regime (see :class:`FitContext`).  Under
+    ``"pic"`` the ``(dwarm, hw)`` device cache rides the search carry with
+    write-through and comes back in ``SearchResult.aux``.
+    """
+    n = data.shape[0]
+    be = get_stats_backend(backend)
+    B = batch_size
+    # baseline="none" never reads the leader cross-sum; lead=None lets the
+    # backends skip the leader-row work entirely (static at trace time).
+    ld = (lambda lead: lead) if baseline == "leader" else (lambda lead: None)
+
+    if mode == "pic":
+        def stats_fn(ref_idx, w, lead, rnd, aux):
+            dxy, aux = cache_read_or_write(be, data, ref_idx, metric=metric,
+                                           batch_size=B, rnd=rnd, aux=aux)
+            s, q, c = be.build_stats_from_d(dxy, dnear[ref_idx], w, ld(lead))
+            return s, q, c, aux
+
+        aux_init = (dwarm, hw)
+        free = hw
+    elif mode == "warm":
+        def stats_fn(ref_idx, w, lead, rnd):
+            # paper App 2.2 cache: warm rounds read precomputed distance
+            # columns (same fixed permutation across every search call)
+            return jax.lax.cond(
+                rnd < free_rounds,
+                lambda _: be.build_stats_from_d(
+                    jax.lax.dynamic_slice_in_dim(dwarm, rnd * B, B, 1),
+                    dnear[ref_idx], w, ld(lead)),
+                lambda _: be.build_stats(data, ref_idx, dnear[ref_idx], w,
+                                         ld(lead), metric=metric),
+                None)
+
+        aux_init = None
+        free = free_rounds
+    else:
+        def stats_fn(ref_idx, w, lead, rnd):
+            return be.build_stats(data, ref_idx, dnear[ref_idx], w,
+                                  ld(lead), metric=metric)
+
+        aux_init = None
+        free = 0
+
+    def exact_fn():
+        dist = get_metric(metric)
+        idx_np, w_np = _ref_chunks(n, _EXACT_CHUNK)
+        idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
+
+        def body(acc, iw):
+            i, wc = iw
+            g = _build_g(dist(data, data[i]), dnear[i])
+            return acc + jnp.sum(g * wc[None, :], axis=1), None
+
+        sums, _ = jax.lax.scan(body, jnp.zeros((n,), jnp.float32), (idx, w))
+        return sums / n
+
+    return adaptive_search(key, stats_fn=stats_fn, exact_fn=exact_fn,
+                           n_arms=n, n_ref=n, batch_size=B, delta=delta,
+                           active_init=jnp.logical_not(med_mask),
+                           sampling=sampling, baseline=baseline, perm=perm,
+                           free_rounds=free, aux_init=aux_init)
+
+
+_build_step_jit = jax.jit(
+    _build_step, static_argnames=("backend", "metric", "batch_size", "delta",
+                                  "sampling", "baseline", "mode",
+                                  "free_rounds"))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("backend", "metric", "batch_size",
+                                    "delta", "sampling", "baseline", "k",
+                                    "mode", "free_rounds"))
+def _build_fused(data, subkeys, dwarm, hw, perm, *, backend: str, metric: str,
+                 batch_size: int, delta: float, sampling: str, baseline: str,
+                 k: int, mode: str, free_rounds: int):
+    """The whole BUILD phase as ONE jit: ``fori_loop`` over the k medoid
+    selections, with d_near / the medoid mask / the device PIC cache as
+    loop carry.  Returns per-step rounds and the fresh/cached ledger
+    entries so the host never syncs mid-phase."""
+    n = data.shape[0]
+    B = batch_size
+    dist = get_metric(metric)
+    pic = mode == "pic"
+
+    def body(i, c):
+        dnear, med_mask, medoids, dw, hwc, rounds_a, evals_a, cached_a = c
+        sr = _build_step(data, dnear, med_mask, subkeys[i], dw, hwc, perm,
+                         backend=backend, metric=metric, batch_size=B,
+                         delta=delta, sampling=sampling, baseline=baseline,
+                         mode=mode, free_rounds=free_rounds)
+        m = sr.best
+        medoids = medoids.at[i].set(m)
+        med_mask = med_mask.at[m].set(True)
+        dnear = jnp.minimum(dnear, dist(data[m][None, :], data)[0])
+        if pic:
+            dw, hw2 = sr.aux
+            # Fresh cost = the columns newly materialised into the PIC
+            # cache (full columns, so later searches get them free);
+            # warm rounds are tallied separately as cached reads.
+            fresh = pic_fresh_evals(n, B, hwc, hw2)
+            cached_a = cached_a.at[i].set(sr.n_evals_cached)
+            hwc = hw2
+        else:
+            fresh = sr.n_evals
+        evals_a = evals_a.at[i].set(fresh)
+        rounds_a = rounds_a.at[i].set(sr.rounds)
+        return (dnear, med_mask, medoids, dw, hwc, rounds_a, evals_a,
+                cached_a)
+
+    init = (jnp.full((n,), jnp.inf, jnp.float32),
+            jnp.zeros((n,), jnp.bool_),
+            jnp.zeros((k,), jnp.int32),
+            dwarm, hw,
+            jnp.zeros((k,), jnp.int32),
+            jnp.zeros((k,), jnp.uint32),
+            jnp.zeros((k,), jnp.uint32))
+    return jax.lax.fori_loop(0, k, body, init)
+
+
+# ---------------------------------------------------------------------------
+# SWAP (FastPAM1 fused form)
+# ---------------------------------------------------------------------------
+
+def _swap_search(data, d1, d2, assign, med_mask, key, dwarm, hw, perm,
+                 init_sums, init_sqsums, init_rounds, *, backend: str,
+                 metric: str, batch_size: int, delta: float, k: int,
+                 sampling: str, baseline: str, early_stop: bool, mode: str,
+                 free_rounds: int = 0) -> SearchResult:
+    """One SWAP best-arm search over the (medoid, candidate) arm set."""
+    n = data.shape[0]
+    be = get_stats_backend(backend)
+    B = batch_size
+    ld = (lambda lead: lead) if baseline == "leader" else (lambda lead: None)
+
+    if mode == "pic":
+        def stats_fn(ref_idx, w, lead, rnd, aux):
+            dxy, aux = cache_read_or_write(be, data, ref_idx, metric=metric,
+                                           batch_size=B, rnd=rnd, aux=aux)
+            s, q, c = be.swap_stats_from_d(dxy, d1[ref_idx], d2[ref_idx],
+                                           assign[ref_idx], w, k, ld(lead))
+            return s, q, c, aux
+
+        aux_init = (dwarm, hw)
+        free = hw
+    elif mode == "warm":
+        def stats_fn(ref_idx, w, lead, rnd):
+            return jax.lax.cond(
+                rnd < free_rounds,
+                lambda _: be.swap_stats_from_d(
+                    jax.lax.dynamic_slice_in_dim(dwarm, rnd * B, B, 1),
+                    d1[ref_idx], d2[ref_idx], assign[ref_idx], w, k,
+                    ld(lead)),
+                lambda _: be.swap_stats(data, ref_idx, d1[ref_idx],
+                                        d2[ref_idx], assign[ref_idx], w, k,
+                                        ld(lead), metric=metric),
+                None)
+
+        aux_init = None
+        free = free_rounds
+    else:
+        def stats_fn(ref_idx, w, lead, rnd):
+            return be.swap_stats(data, ref_idx, d1[ref_idx], d2[ref_idx],
+                                 assign[ref_idx], w, k, ld(lead),
+                                 metric=metric)
+
+        aux_init = None
+        free = 0
+
+    def exact_fn():
+        dist = get_metric(metric)
+        idx_np, w_np = _ref_chunks(n, _EXACT_CHUNK)
+        idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
+
+        def body(acc, iw):
+            i, wc = iw
+            s, _ = _swap_batch_stats(dist(data, data[i]), d1[i], d2[i],
+                                     assign[i], wc, k)
+            return acc + s, None
+
+        sums, _ = jax.lax.scan(body, jnp.zeros((k * n,), jnp.float32),
+                               (idx, w))
+        return sums / n
+
+    # Candidates that are already medoids are not valid swap targets.
+    active0 = jnp.tile(jnp.logical_not(med_mask)[None, :], (k, 1)).reshape(-1)
+
+    def count_fn(active):
+        # FastPAM1: one distance per (x, y) pair serves all k arms (·, x).
+        any_x = jnp.any(active.reshape(k, n), axis=0)
+        return jnp.sum(any_x.astype(jnp.uint32))
+
+    return adaptive_search(key, stats_fn=stats_fn, exact_fn=exact_fn,
+                           n_arms=k * n, n_ref=n, batch_size=B, delta=delta,
+                           active_init=active0, count_fn=count_fn,
+                           sampling=sampling, baseline=baseline,
+                           stop_when_positive=early_stop, perm=perm,
+                           free_rounds=free, init_sums=init_sums,
+                           init_sqsums=init_sqsums, init_rounds=init_rounds,
+                           aux_init=aux_init)
+
+
+_swap_search_jit = jax.jit(
+    _swap_search, static_argnames=("backend", "metric", "batch_size",
+                                   "delta", "k", "sampling", "baseline",
+                                   "early_stop", "mode", "free_rounds"))
+
+
+def _swap_iter(data, medoids, med_mask, key, dwarm, hw, perm, perm_idx,
+               perm_w, carry, *, backend: str, metric: str, batch_size: int,
+               delta: float, k: int, sampling: str, baseline: str,
+               early_stop: bool, mode: str, free_rounds: int):
+    """One SWAP iteration as a single fused device step: medoid-cache
+    refresh + carried-moment repair (``_carry_delta``) + bandit search +
+    candidate loss.  Only the accept/converge decision (one scalar read)
+    is left to the host."""
+    n = data.shape[0]
+    B = batch_size
+    d1, d2, assign = medoid_cache(data, medoids, metric=metric)
+    n_changed = jnp.int32(0)
+    init_sums = init_sqsums = None
+    init_rounds = 0
+    if carry is not None:
+        # BanditPAM++ PIC: the previous search's per-arm moments stay
+        # valid for every arm whose g is unchanged; _carry_delta repairs
+        # only the contributions of reference points hit by the accepted
+        # swap, from cached columns (zero fresh evals).
+        c_sums, c_sq, c_rounds, d1o, d2o, ao = carry
+        init_sums, init_sqsums, n_changed = _carry_delta(
+            dwarm, perm_idx, perm_w, c_rounds * B, d1o, d2o, ao,
+            d1, d2, assign, c_sums, c_sq, k=k)
+        init_rounds = c_rounds
+    sr = _swap_search(data, d1, d2, assign, med_mask, key, dwarm, hw, perm,
+                      init_sums, init_sqsums, init_rounds, backend=backend,
+                      metric=metric, batch_size=B, delta=delta, k=k,
+                      sampling=sampling, baseline=baseline,
+                      early_stop=early_stop, mode=mode,
+                      free_rounds=free_rounds)
+    if mode == "pic":
+        dwarm2, hw2 = sr.aux
+        fresh = pic_fresh_evals(n, B, hw, hw2)
+        cached = sr.n_evals_cached + jnp.uint32(n) * n_changed.astype(
+            jnp.uint32)
+    else:
+        dwarm2, hw2 = dwarm, hw
+        fresh = sr.n_evals
+        cached = sr.n_evals_cached
+    m_idx = sr.best // n
+    x_idx = sr.best % n
+    cand = medoids.at[m_idx].set(x_idx)
+    new_loss = total_loss(data, cand, metric=metric)
+    new_carry = (sr.sums, sr.sqsums, sr.rounds, d1, d2, assign)
+    return (sr.best, new_loss, cand, new_carry, dwarm2, hw2, fresh, cached,
+            sr.used_exact)
+
+
+_swap_iter_jit = jax.jit(
+    _swap_iter, static_argnames=("backend", "metric", "batch_size", "delta",
+                                 "k", "sampling", "baseline", "early_stop",
+                                 "mode", "free_rounds"))
+
+
+# ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
 
@@ -377,13 +408,21 @@ FitResult = FitReport
 
 
 class BanditPAM:
-    """k-medoids via adaptive sampling; same medoids as PAM w.h.p."""
+    """k-medoids via adaptive sampling; same medoids as PAM w.h.p.
+
+    ``backend`` selects the g-statistics compute path
+    (``repro.core.engine``): ``"auto"`` (kernels on accelerators, jnp on
+    CPU), ``"pallas"``, ``"jnp"``, or any registered backend name.
+    ``fused=False`` falls back to the host-orchestrated stepped driver
+    (same math, one dispatch per sub-step) — the benchmark baseline.
+    """
 
     def __init__(self, k: int, metric: str = "l2", batch_size: int = 100,
                  delta: Optional[float] = None, max_swaps: Optional[int] = None,
                  seed: int = 0, sampling: str = "permutation",
                  baseline: str = "none", swap_early_stop: bool = False,
-                 cache_cols: int = 0, reuse: str = "none"):
+                 cache_cols: int = 0, reuse: str = "none",
+                 backend: str = "auto", fused: bool = True):
         if reuse not in ("none", "pic"):
             raise ValueError(f"unknown reuse mode {reuse!r}")
         if reuse == "pic" and sampling != "permutation":
@@ -400,115 +439,140 @@ class BanditPAM:
         self.swap_early_stop = swap_early_stop
         self.cache_cols = cache_cols
         self.reuse = reuse
+        self.backend = backend
+        self.fused = bool(fused)
 
-    def _cache_view(self):
-        """(perm, dwarm, free_rounds) for the next search under either
-        cache regime (PIC lazily-grown vs upfront warm block vs none)."""
-        if self._pic is not None:
-            dwarm, free_rounds = self._pic.view()
-            return self._pic.perm, dwarm, free_rounds
-        return self._perm, self._dwarm, self._free_rounds
+    # -- per-fit context -------------------------------------------------
+    def _make_context(self, data: jnp.ndarray, ckey: jax.Array, backend: str,
+                      res: FitResult) -> FitContext:
+        """Build the per-fit :class:`FitContext` (cache regime + buffers).
+
+        All state lives on the context, never on the instance — ``fit`` is
+        re-entrant and refitting the same estimator starts clean."""
+        n = data.shape[0]
+        be = get_stats_backend(backend)
+        B = self.batch_size
+        if self.reuse == "pic":
+            perm = jax.random.permutation(ckey, n).astype(jnp.int32)
+            n_rounds_max = -(-n // B)
+            width = n_rounds_max * B
+            perm_np = np.asarray(perm)
+            # Same tiling as adaptive_search: positions >= n are w=0 padding.
+            perm_idx = jnp.asarray(np.tile(perm_np, -(-width // n))[:width])
+            perm_w = jnp.asarray((np.arange(width) < n).astype(np.float32))
+            dwarm = jnp.zeros((n, width), jnp.float32)
+            hw = jnp.int32(0)
+            if self.cache_cols > 0:
+                # optional upfront warm block, same semantics as reuse="none"
+                warm = min(self.cache_cols, n) // B
+                if warm > 0:
+                    cols = be.pairwise(data, data[perm_idx[:warm * B]],
+                                       metric=self.metric)
+                    dwarm = dwarm.at[:, :warm * B].set(cols)
+                    hw = jnp.int32(warm)
+                    res.evals_by_phase["cache_warm"] = n * warm * B
+            return FitContext(mode="pic", backend=backend, perm=perm,
+                              perm_idx=perm_idx, perm_w=perm_w,
+                              dwarm=dwarm, hw_rounds=hw)
+        if self.cache_cols > 0 and self.sampling == "permutation":
+            # Paper App 2.2: one fixed reference permutation for every
+            # search + a warm block of its first C columns, paid once.
+            c = (min(self.cache_cols, n) // B) * B
+            if c > 0:
+                perm = jax.random.permutation(ckey, n).astype(jnp.int32)
+                dwarm = be.pairwise(data, data[perm[:c]], metric=self.metric)
+                res.evals_by_phase["cache_warm"] = n * c
+                return FitContext(mode="warm", backend=backend, perm=perm,
+                                  dwarm=dwarm, free_rounds=c // B)
+        return FitContext(mode="none", backend=backend)
 
     # -- BUILD ----------------------------------------------------------
-    def _make_cache(self, data: jnp.ndarray, key: jax.Array, res: FitResult):
-        """Paper App 2.2: one fixed reference permutation for every search
-        + a warm block of its first C distance columns, paid once."""
+    def _build(self, data: jnp.ndarray, key: jax.Array, ctx: FitContext,
+               res: FitResult):
         n = data.shape[0]
-        if self.cache_cols <= 0 or self.sampling != "permutation":
-            return None, None, 0
-        c = (min(self.cache_cols, n) // self.batch_size) * self.batch_size
-        if c <= 0:
-            return None, None, 0
-        perm = jax.random.permutation(key, n).astype(jnp.int32)
-        dwarm = get_metric(self.metric)(data, data[perm[:c]])
-        res.evals_by_phase["cache_warm"] = n * c
-        return perm, dwarm, c // self.batch_size
-
-    def _build(self, data: jnp.ndarray, key: jax.Array, res: FitResult):
-        n = data.shape[0]
-        dist = get_metric(self.metric)
         delta = self.delta if self.delta is not None else 1.0 / (1000.0 * n)
-        dnear = jnp.full((n,), jnp.inf, jnp.float32)
-        med_mask = jnp.zeros((n,), jnp.bool_)
-        medoids: List[int] = []
-        build_evals = 0
-        build_cached = 0
+        # One subkey per medoid selection, split exactly as the legacy
+        # host loop did, so trajectories are seed-compatible.
+        subs = []
         for _ in range(self.k):
             key, sub = jax.random.split(key)
-            perm, dwarm, free_rounds = self._cache_view()
-            sr = _build_search(data, dnear, med_mask, sub, metric=self.metric,
-                               batch_size=self.batch_size, delta=delta,
-                               sampling=self.sampling, baseline=self.baseline,
-                               perm=perm, dwarm=dwarm, free_rounds=free_rounds)
-            m = int(sr.best)
-            medoids.append(m)
-            med_mask = med_mask.at[m].set(True)
-            drow = dist(data[m][None, :], data)[0]
-            dnear = jnp.minimum(dnear, drow)
-            if self._pic is not None:
-                # Fresh cost = the columns newly materialised into the PIC
-                # cache (full columns, so later searches get them free);
-                # warm rounds are tallied separately as cached reads.
-                build_evals += self._pic.ensure(int(sr.rounds)) + n
-                build_cached += int(sr.n_evals_cached)
-            else:
-                build_evals += int(sr.n_evals) + n
-            res.build_rounds.append(int(sr.rounds))
-        res.evals_by_phase["build"] = build_evals
-        if self._pic is not None:
-            res.evals_by_phase["build_cached"] = build_cached
-        return jnp.asarray(medoids, jnp.int32), med_mask, key
+            subs.append(sub)
+        subkeys = jnp.stack(subs)
+        kw = dict(backend=ctx.backend, metric=self.metric,
+                  batch_size=self.batch_size, delta=delta,
+                  sampling=self.sampling, baseline=self.baseline,
+                  mode=ctx.mode, free_rounds=ctx.free_rounds)
+        if self.fused:
+            (dnear, med_mask, medoids, dwarm, hw, rounds_a, evals_a,
+             cached_a) = _build_fused(data, subkeys, ctx.dwarm,
+                                      ctx.hw_rounds, ctx.perm, k=self.k, **kw)
+        else:
+            # Stepped baseline: one dispatch + one host sync per medoid.
+            dist = get_metric(self.metric)
+            dnear = jnp.full((n,), jnp.inf, jnp.float32)
+            med_mask = jnp.zeros((n,), jnp.bool_)
+            dwarm, hw = ctx.dwarm, ctx.hw_rounds
+            meds, rounds_a, evals_a, cached_a = [], [], [], []
+            for i in range(self.k):
+                sr = _build_step_jit(data, dnear, med_mask, subkeys[i],
+                                     dwarm, hw, ctx.perm, **kw)
+                m = int(sr.best)
+                meds.append(m)
+                med_mask = med_mask.at[m].set(True)
+                dnear = jnp.minimum(dnear, dist(data[m][None, :], data)[0])
+                if ctx.mode == "pic":
+                    dwarm, hw2 = sr.aux
+                    evals_a.append(int(pic_fresh_evals(
+                        n, self.batch_size, hw, hw2)))
+                    cached_a.append(int(sr.n_evals_cached))
+                    hw = hw2
+                else:
+                    evals_a.append(int(sr.n_evals))
+                rounds_a.append(int(sr.rounds))
+            medoids = jnp.asarray(meds, jnp.int32)
+        ctx.dwarm, ctx.hw_rounds = dwarm, hw
+        res.build_rounds.extend(
+            int(r) for r in np.asarray(rounds_a, np.int64))
+        res.evals_by_phase["build"] = (
+            int(np.asarray(evals_a, np.int64).sum()) + n * self.k)
+        if ctx.mode == "pic":
+            res.evals_by_phase["build_cached"] = int(
+                np.asarray(cached_a, np.int64).sum())
+        return medoids, med_mask, key
 
     # -- SWAP -----------------------------------------------------------
     def _swap(self, data: jnp.ndarray, medoids: jnp.ndarray,
-              med_mask: jnp.ndarray, key: jax.Array, res: FitResult):
+              med_mask: jnp.ndarray, key: jax.Array, ctx: FitContext,
+              res: FitResult):
         n = data.shape[0]
-        delta = self.delta if self.delta is not None else 1.0 / (1000.0 * self.k * n)
+        delta = (self.delta if self.delta is not None
+                 else 1.0 / (1000.0 * self.k * n))
         swap_evals = 0
         swap_cached = 0
         loss = float(total_loss(data, medoids, metric=self.metric))
         converged = False
-        carry = None  # (sums, sqsums, rounds, d1, d2, assign) of the last search
+        carry = None  # (sums, sqsums, rounds, d1, d2, assign) of last search
+        kw = dict(backend=ctx.backend, metric=self.metric,
+                  batch_size=self.batch_size, delta=delta, k=self.k,
+                  sampling=self.sampling, baseline=self.baseline,
+                  early_stop=self.swap_early_stop, mode=ctx.mode,
+                  free_rounds=ctx.free_rounds)
+        step = _swap_iter_jit if self.fused else self._swap_iter_stepped
         for _ in range(self.max_swaps):
-            d1, d2, assign = medoid_cache(data, medoids, metric=self.metric)
-            swap_evals += n * self.k
-            init_sums = init_sqsums = None
-            init_rounds = 0
-            perm, dwarm, free_rounds = self._cache_view()
-            if carry is not None:
-                # BanditPAM++ PIC: the previous search's per-arm moments stay
-                # valid for every arm whose g is unchanged; _carry_delta
-                # repairs only the contributions of reference points hit by
-                # the accepted swap, from cached columns (zero fresh evals).
-                c_sums, c_sq, c_rounds, d1o, d2o, ao = carry
-                width = dwarm.shape[1]
-                init_sums, init_sqsums, n_changed = _carry_delta(
-                    dwarm, self._pic.perm_idx[:width], self._pic.perm_w[:width],
-                    jnp.int32(c_rounds * self.batch_size), d1o, d2o, ao,
-                    d1, d2, assign, c_sums, c_sq, k=self.k)
-                swap_cached += n * int(n_changed)
-                init_rounds = c_rounds
             key, sub = jax.random.split(key)
-            sr = _swap_search(data, d1, d2, assign, med_mask, sub,
-                              metric=self.metric, batch_size=self.batch_size,
-                              delta=delta, k=self.k, sampling=self.sampling,
-                              baseline=self.baseline,
-                              early_stop=self.swap_early_stop,
-                              perm=perm, dwarm=dwarm, free_rounds=free_rounds,
-                              init_sums=init_sums, init_sqsums=init_sqsums,
-                              init_rounds=jnp.int32(init_rounds))
-            if self._pic is not None:
-                swap_evals += self._pic.ensure(int(sr.rounds))
-                swap_cached += int(sr.n_evals_cached)
-                carry = (sr.sums, sr.sqsums, int(sr.rounds), d1, d2, assign)
-            else:
-                swap_evals += int(sr.n_evals)
-            res.swap_exact_fallbacks += int(sr.used_exact)
-            m_idx, x_idx = divmod(int(sr.best), n)
-            cand = medoids.at[m_idx].set(x_idx)
-            new_loss = float(total_loss(data, cand, metric=self.metric))
-            swap_evals += n * self.k
+            (best, new_loss_d, cand, new_carry, dwarm, hw, fresh, cached,
+             used_exact) = step(data, medoids, med_mask, sub, ctx.dwarm,
+                                ctx.hw_rounds, ctx.perm, ctx.perm_idx,
+                                ctx.perm_w, carry, **kw)
+            ctx.dwarm, ctx.hw_rounds = dwarm, hw
+            swap_evals += 2 * n * self.k + int(fresh)
+            swap_cached += int(cached)
+            res.swap_exact_fallbacks += int(used_exact)
+            if ctx.mode == "pic":
+                carry = new_carry
+            new_loss = float(new_loss_d)
             if new_loss < loss - 1e-7 * max(1.0, abs(loss)):
+                m_idx, x_idx = divmod(int(best), n)
                 old = int(medoids[m_idx])
                 medoids = cand
                 med_mask = med_mask.at[old].set(False).at[x_idx].set(True)
@@ -518,33 +582,71 @@ class BanditPAM:
                 converged = True
                 break
         res.evals_by_phase["swap"] = swap_evals
-        if self._pic is not None:
+        if ctx.mode == "pic":
             res.evals_by_phase["swap_cached"] = swap_cached
         return medoids, loss, converged
+
+    def _swap_iter_stepped(self, data, medoids, med_mask, key, dwarm, hw,
+                           perm, perm_idx, perm_w, carry, *, backend, metric,
+                           batch_size, delta, k, sampling, baseline,
+                           early_stop, mode, free_rounds):
+        """Host-orchestrated SWAP iteration (benchmark baseline): the same
+        sub-steps as ``_swap_iter`` but as separate dispatches with host
+        round-trips between — the pre-refactor driver architecture."""
+        n = data.shape[0]
+        B = batch_size
+        d1, d2, assign = medoid_cache(data, medoids, metric=metric)
+        jax.block_until_ready(d1)
+        init_sums = init_sqsums = None
+        init_rounds = 0
+        n_changed = 0
+        if carry is not None:
+            c_sums, c_sq, c_rounds, d1o, d2o, ao = carry
+            init_sums, init_sqsums, nc = _carry_delta(
+                dwarm, perm_idx, perm_w, c_rounds * B, d1o, d2o, ao,
+                d1, d2, assign, c_sums, c_sq, k=k)
+            n_changed = int(nc)
+            init_rounds = c_rounds
+        sr = _swap_search_jit(data, d1, d2, assign, med_mask, key, dwarm, hw,
+                              perm, init_sums, init_sqsums, init_rounds,
+                              backend=backend, metric=metric, batch_size=B,
+                              delta=delta, k=k, sampling=sampling,
+                              baseline=baseline, early_stop=early_stop,
+                              mode=mode, free_rounds=free_rounds)
+        if mode == "pic":
+            dwarm, hw2 = sr.aux
+            fresh = int(pic_fresh_evals(n, B, hw, hw2))
+            cached = int(sr.n_evals_cached) + n * n_changed
+        else:
+            hw2 = hw
+            fresh = int(sr.n_evals)
+            cached = int(sr.n_evals_cached)
+        m_idx, x_idx = divmod(int(sr.best), n)
+        cand = medoids.at[m_idx].set(x_idx)
+        new_loss = total_loss(data, cand, metric=metric)
+        new_carry = (sr.sums, sr.sqsums, sr.rounds, d1, d2, assign)
+        return (int(sr.best), new_loss, cand, new_carry, dwarm, hw2, fresh,
+                cached, int(sr.used_exact))
 
     # -- public ----------------------------------------------------------
     def fit(self, data) -> FitResult:
         data = jnp.asarray(data, jnp.float32)
         if data.shape[0] <= self.k:
             raise ValueError("need n > k")
+        backend = resolve_stats_backend(self.backend, self.metric)
         key = jax.random.PRNGKey(self.seed)
         res = FitResult(medoids=np.zeros(self.k, np.int64), loss=np.inf,
                         n_swaps=0, converged=False, distance_evals=0)
         key, ckey = jax.random.split(key)
-        if self.reuse == "pic":
-            self._perm, self._dwarm, self._free_rounds = None, None, 0
-            perm = jax.random.permutation(ckey, data.shape[0]).astype(jnp.int32)
-            self._pic = _PicCache(data, perm, self.batch_size, self.metric)
-            if self.cache_cols > 0:
-                # optional upfront warm block, same semantics as reuse="none"
-                warm = min(self.cache_cols, data.shape[0]) // self.batch_size
-                res.evals_by_phase["cache_warm"] = self._pic.ensure(warm)
-        else:
-            self._pic = None
-            self._perm, self._dwarm, self._free_rounds = self._make_cache(
-                data, ckey, res)
-        medoids, med_mask, key = self._build(data, key, res)
-        medoids, loss, converged = self._swap(data, medoids, med_mask, key, res)
+        ctx = self._make_context(data, ckey, backend, res)
+        t0 = time.perf_counter()
+        medoids, med_mask, key = self._build(data, key, ctx, res)
+        jax.block_until_ready(medoids)
+        res.wall_by_phase["build"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        medoids, loss, converged = self._swap(data, medoids, med_mask, key,
+                                              ctx, res)
+        res.wall_by_phase["swap"] = time.perf_counter() - t0
         res.medoids = np.asarray(medoids)
         res.loss = loss
         res.n_swaps = len(res.swap_history)

@@ -1,12 +1,13 @@
 """Distributed BanditPAM: data-sharded references x replicated/sharded arms.
 
-The multi-device execution of Algorithm 1 (DESIGN.md §2/§3):
+The multi-device execution of Algorithm 1 (docs/design.md hardware
+adaptations #2/#4, mesh conventions §2):
 
 * The reference set is sharded over the ``data`` (and ``pod``) mesh axes —
   each device owns ``n / n_shards`` points.
 * Reference sampling is **stratified**: every round each shard contributes
   ``B / n_shards`` uniform draws from its local points (equal-size strata
-  ⇒ the estimator of mu_x stays unbiased; DESIGN.md hardware adaptation #4).
+  ⇒ the estimator of mu_x stays unbiased; docs/design.md hardware adaptation #4).
 * Each device computes the g-statistics of ALL arms against its local
   reference draw; a single ``psum`` over the data axes yields the global
   per-arm batch sums.  Arm elimination runs redundantly on every device
@@ -30,8 +31,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .adaptive import adaptive_search
-from .banditpam import FitResult, _build_g, _swap_batch_stats
+from .banditpam import FitResult
 from .distances import get_metric
+from .engine import _build_g, _swap_batch_stats
 
 
 def _data_axes(mesh: Mesh) -> Tuple[str, ...]:

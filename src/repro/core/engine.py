@@ -1,0 +1,378 @@
+"""StatsBackend — the one seam between the bandit drivers and the
+g-statistics compute paths.
+
+Before this layer existed the Pallas kernels (``repro.kernels.ops``) were
+exercised only by tests and benchmarks while the real fit path ran
+pure-jnp statistics.  ``StatsBackend`` unifies the three g-statistics
+paths behind one contract so the drivers are backend-agnostic and the
+kernels power the actual fit:
+
+* ``"jnp"``    — jit'd XLA math (``_build_g`` / ``_swap_batch_stats``);
+  works for every registered metric, including user callables and
+  ``"precomputed"``.
+* ``"pallas"`` — the fused TPU kernels (``kernels.ops.build_g_stats`` /
+  ``swap_g_stats`` for fresh rounds, ``swap_g_stats_cached`` for rounds
+  served from the device-resident PIC column cache).  Kernel-implemented
+  metrics only; interpret-mode on CPU.
+* cache-served — both backends read warm rounds from a resident distance
+  block via the ``*_from_d`` methods (the Pallas side uses the dedicated
+  cached-stats kernel for SWAP; BUILD stats from a resident block are
+  distance-free vector math and share the jnp formula).
+
+Selection is by name (``backend="auto" | "pallas" | "jnp"`` on
+``BanditPAM`` / ``repro.api.KMedoids``); the registry is open so an
+out-of-tree backend (a GPU Triton port, say) is one ``register_stats_backend``
+call.  ``"auto"`` picks Pallas for kernel-implemented metrics on a real
+accelerator and jnp everywhere else — interpret-mode Pallas on CPU is
+correct but slow, so it must be requested explicitly.
+
+``FitContext`` carries every piece of per-fit state (RNG key, the fixed
+reference permutation, the device-resident PIC cache buffer and its
+high-water mark) that historically leaked onto the ``BanditPAM`` instance,
+making ``fit`` re-entrant.
+
+The shared g-statistics math (``_build_g``, ``_swap_terms``,
+``_swap_batch_stats``), the medoid cache, and the exact loss live here so
+``core.banditpam``, ``core.pam``, and ``core.distributed`` all draw from
+one definition.  See docs/design.md for the numbered hardware adaptations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .distances import get_metric
+
+_EXACT_CHUNK = 512  # reference-chunk size for exact fallback passes
+
+
+# ---------------------------------------------------------------------------
+# Shared cache / loss helpers
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def medoid_cache(data: jnp.ndarray, medoids: jnp.ndarray, *, metric: str
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """d1 (nearest-medoid dist), d2 (second nearest), assignment; [n] each."""
+    dmat = get_metric(metric)(data, data[medoids])          # [n, k]
+    assign = jnp.argmin(dmat, axis=1).astype(jnp.int32)
+    d1 = jnp.min(dmat, axis=1)
+    dmat2 = dmat.at[jnp.arange(dmat.shape[0]), assign].set(jnp.inf)
+    d2 = jnp.min(dmat2, axis=1)
+    return d1, d2, assign
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def total_loss(data: jnp.ndarray, medoids: jnp.ndarray, *, metric: str) -> jnp.ndarray:
+    dmat = get_metric(metric)(data, data[medoids])
+    return jnp.sum(jnp.min(dmat, axis=1))
+
+
+def _ref_chunks(n_ref: int, chunk: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Static index/weight tiling of [0, n_ref) into equal chunks."""
+    n_chunks = -(-n_ref // chunk)
+    idx = np.arange(n_chunks * chunk)
+    w = (idx < n_ref).astype(np.float32)
+    idx = np.minimum(idx, n_ref - 1)
+    return idx.reshape(n_chunks, chunk), w.reshape(n_chunks, chunk)
+
+
+# ---------------------------------------------------------------------------
+# g-statistics math (the Eq. 6 / Eq. 12 forms shared by every caller)
+# ---------------------------------------------------------------------------
+
+def _build_g(dxy: jnp.ndarray, dnear_b: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 6 with the Eq. 4 special-case for the first assignment."""
+    dn = dnear_b[None, :]
+    return jnp.where(jnp.isinf(dn), dxy, jnp.minimum(dxy - dn, 0.0))
+
+
+def _swap_terms(dxy: jnp.ndarray, d1_b: jnp.ndarray, d2_b: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    base = jnp.minimum(dxy, d1_b[None, :]) - d1_b[None, :]
+    corr = jnp.minimum(dxy, d2_b[None, :]) - jnp.minimum(dxy, d1_b[None, :])
+    return base, corr
+
+
+def _swap_batch_stats(dxy, d1_b, d2_b, a_b, w, k, lead=None):
+    """Per-arm (m·n + x) sums, square-sums (and optional leader cross-sums)
+    over a reference batch.
+
+    g = base + 1[assign==m]·corr  ⇒
+      Σ g        = Σ base + Σ_{y∈C_m} corr
+      Σ g²       = Σ base² + Σ_{y∈C_m} (2·base·corr + corr²)
+      Σ g·g_lead = Σ base·g_lead + Σ_{y∈C_m} corr·g_lead
+    The C_m-restricted sums are one-hot matmuls (MXU-shaped).
+    """
+    n = dxy.shape[0]
+    base, corr = _swap_terms(dxy, d1_b, d2_b)
+    # weights are {0,1} (padding mask), so w² = w and masking base once is
+    # enough for every product below.
+    base = base * w[None, :]
+    onehot = jax.nn.one_hot(a_b, k, dtype=dxy.dtype) * w[:, None]   # [B, k]
+    sums = jnp.sum(base, axis=1)[None, :] + (corr @ onehot).T       # [k, n]
+    sq_base = jnp.sum(base * base, axis=1)
+    sq_cross = 2.0 * base * corr + corr * corr
+    sqsums = sq_base[None, :] + (sq_cross @ onehot).T
+    if lead is None:
+        return sums.reshape(-1), sqsums.reshape(-1)
+    m_l, x_l = lead // n, lead % n
+    g_lead = base[x_l] + onehot[:, m_l] * corr[x_l]                 # [B], w-masked
+    cross = (base @ g_lead)[None, :] + ((corr * g_lead[None, :]) @ onehot).T
+    return sums.reshape(-1), sqsums.reshape(-1), cross.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident PIC cache primitives (shared by the BUILD and SWAP
+# search drivers — the one definition of the write-through and its ledger)
+# ---------------------------------------------------------------------------
+
+def cache_read_or_write(be, data, ref_idx, *, metric: str, batch_size: int,
+                        rnd, aux):
+    """One PIC cache access inside a bandit round: serve round ``rnd``
+    from the device column buffer when already materialised, else compute
+    the block fresh through the backend's pairwise path and write it
+    through.  ``aux`` is the ``(dwarm [n, width], hw_rounds)`` search
+    carry; returns ``(dxy [n, B], aux')`` with the high-water mark
+    advanced past ``rnd``."""
+    dw, hw = aux
+    B = batch_size
+
+    def cached(dw):
+        return jax.lax.dynamic_slice_in_dim(dw, rnd * B, B, 1), dw
+
+    def fresh(dw):
+        dxy = be.pairwise(data, data[ref_idx], metric=metric)
+        return dxy, jax.lax.dynamic_update_slice_in_dim(dw, dxy, rnd * B, 1)
+
+    dxy, dw = jax.lax.cond(rnd < hw, cached, fresh, dw)
+    return dxy, (dw, jnp.maximum(hw, rnd + 1))
+
+
+def pic_fresh_evals(n: int, batch_size: int, hw0, hw1):
+    """Ledger rule for PIC materialisation: fresh cost is ``n`` per newly
+    effective reference position (a full column, which is what makes the
+    position free for every arm of every later search) in rounds
+    ``[hw0, hw1)``; positions past ``n`` are permutation padding and cost
+    nothing.  Returns a uint32 scalar (device or host operands)."""
+    eff0 = jnp.minimum(jnp.asarray(hw0, jnp.int32) * batch_size, n)
+    eff1 = jnp.minimum(jnp.asarray(hw1, jnp.int32) * batch_size, n)
+    return jnp.uint32(n) * (eff1 - eff0).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# StatsBackend implementations
+# ---------------------------------------------------------------------------
+
+class JnpStatsBackend:
+    """Pure-XLA statistics: any registered metric, any device."""
+
+    name = "jnp"
+
+    def pairwise(self, x, y, *, metric):
+        return get_metric(metric)(x, y)
+
+    # -- BUILD ----------------------------------------------------------
+    def build_stats(self, data, ref_idx, dnear_b, w, lead, *, metric):
+        """Fused fresh-round BUILD stats: (Σg, Σg², Σg·g_lead), [n] each."""
+        return self.build_stats_from_d(
+            get_metric(metric)(data, data[ref_idx]), dnear_b, w, lead)
+
+    def build_stats_from_d(self, dxy, dnear_b, w, lead):
+        """BUILD stats from a resident distance block (cache-served).
+        ``lead=None`` skips the leader cross-sum (baseline="none")."""
+        g = _build_g(dxy, dnear_b) * w[None, :]                     # [n, B]
+        cross = (jnp.zeros((g.shape[0],), g.dtype) if lead is None
+                 else g @ g[lead])
+        return jnp.sum(g, axis=1), jnp.sum(g * g, axis=1), cross
+
+    # -- SWAP (FastPAM1 fused form) -------------------------------------
+    def swap_stats(self, data, ref_idx, d1_b, d2_b, assign_b, w, k, lead,
+                   *, metric):
+        """Fused fresh-round SWAP stats, flattened over the (m, x) arm set."""
+        return self.swap_stats_from_d(get_metric(metric)(data, data[ref_idx]),
+                                      d1_b, d2_b, assign_b, w, k, lead)
+
+    def swap_stats_from_d(self, dxy, d1_b, d2_b, assign_b, w, k, lead):
+        """SWAP stats from a resident distance block (cache-served)."""
+        if lead is None:
+            s, q = _swap_batch_stats(dxy, d1_b, d2_b, assign_b, w, k)
+            return s, q, jnp.zeros_like(s)
+        return _swap_batch_stats(dxy, d1_b, d2_b, assign_b, w, k, lead=lead)
+
+
+class PallasStatsBackend:
+    """Fused Pallas kernels (``repro.kernels``): the distance tile and the
+    arm statistics are computed in one VMEM-resident pass; cache-served
+    SWAP rounds hit the dedicated ``swap_g_from_cache_kernel``.
+
+    The leader control variate (``lead`` is an arm index) needs the leader
+    arm's g-row over the batch — the kernels take it as an input instead
+    of materialising the full g block — so it is derived from one extra
+    pairwise row: a ledger-neutral O(B) add, since evaluation accounting
+    lives in ``adaptive_search``'s ``count_fn``, not in the stats path.
+    With ``lead=None`` (baseline="none", the default) that extra kernel
+    launch is skipped entirely and the cross output is zeros.
+    """
+
+    name = "pallas"
+
+    def __init__(self, interpret: Optional[bool] = None, tm: int = 128):
+        self.interpret = interpret
+        self.tm = tm
+
+    def pairwise(self, x, y, *, metric):
+        from repro.kernels import ops
+        return ops.pairwise_distance(x, y, metric=metric,
+                                     interpret=self.interpret)
+
+    # -- BUILD ----------------------------------------------------------
+    def build_stats(self, data, ref_idx, dnear_b, w, lead, *, metric):
+        from repro.kernels import ops
+        y = data[ref_idx]
+        if lead is None:
+            lead_g = None
+        else:
+            dl = ops.pairwise_distance(data[lead][None, :], y, metric=metric,
+                                       interpret=self.interpret)[0]
+            lead_g = jnp.where(jnp.isinf(dnear_b), dl,
+                               jnp.minimum(dl - dnear_b, 0.0)) * w
+        return ops.build_g_stats(data, y, dnear_b, w, lead_g, metric=metric,
+                                 tm=self.tm, interpret=self.interpret)
+
+    def build_stats_from_d(self, dxy, dnear_b, w, lead):
+        # No distance pass to fuse — cache-served BUILD stats are plain
+        # vector math, shared with the jnp backend.
+        return JnpStatsBackend.build_stats_from_d(self, dxy, dnear_b, w,
+                                                  lead)
+
+    # -- SWAP -----------------------------------------------------------
+    def _swap_lead_g(self, dl, d1_b, d2_b, assign_b, m_l):
+        base_l = jnp.minimum(dl, d1_b) - d1_b
+        corr_l = jnp.minimum(dl, d2_b) - jnp.minimum(dl, d1_b)
+        return base_l + (assign_b == m_l).astype(dl.dtype) * corr_l
+
+    def swap_stats(self, data, ref_idx, d1_b, d2_b, assign_b, w, k, lead,
+                   *, metric):
+        from repro.kernels import ops
+        n = data.shape[0]
+        y = data[ref_idx]
+        if lead is None:
+            lead_g = None
+        else:
+            m_l, x_l = lead // n, lead % n
+            dl = ops.pairwise_distance(data[x_l][None, :], y, metric=metric,
+                                       interpret=self.interpret)[0]
+            lead_g = self._swap_lead_g(dl, d1_b, d2_b, assign_b, m_l)
+        s, q, c = ops.swap_g_stats(data, y, d1_b, d2_b, assign_b, w, k,
+                                   lead_g, metric=metric, tm=self.tm,
+                                   interpret=self.interpret)
+        return s.reshape(-1), q.reshape(-1), c.reshape(-1)
+
+    def swap_stats_from_d(self, dxy, d1_b, d2_b, assign_b, w, k, lead):
+        from repro.kernels import ops
+        n = dxy.shape[0]
+        if lead is None:
+            lead_g = None
+        else:
+            m_l, x_l = lead // n, lead % n
+            lead_g = self._swap_lead_g(dxy[x_l], d1_b, d2_b, assign_b, m_l)
+        s, q, c = ops.swap_g_stats_cached(dxy, d1_b, d2_b, assign_b, w, k,
+                                          lead_g, tm=self.tm,
+                                          interpret=self.interpret)
+        return s.reshape(-1), q.reshape(-1), c.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_BACKENDS: Dict[str, Any] = {}
+
+
+def register_stats_backend(name: str, backend) -> None:
+    """Register a stats backend instance under ``name`` (see the module
+    docstring for the method contract)."""
+    _BACKENDS[name] = backend
+
+
+def get_stats_backend(name: str):
+    if name not in _BACKENDS:
+        raise KeyError(f"unknown stats backend {name!r}; "
+                       f"have {sorted(_BACKENDS)}")
+    return _BACKENDS[name]
+
+
+def available_stats_backends():
+    return sorted(_BACKENDS)
+
+
+register_stats_backend("jnp", JnpStatsBackend())
+register_stats_backend("pallas", PallasStatsBackend())
+
+
+def resolve_stats_backend(backend: Optional[str], metric: str) -> str:
+    """Normalise a ``backend=`` argument to a registered backend name.
+
+    ``"auto"`` (or None) routes kernel-implemented metrics through Pallas
+    only on TPU — the kernels are written against TPU tiling (128-lane
+    padding, MXU-shaped contractions) and are not validated under other
+    lowerings; interpret-mode Pallas on CPU is correct but orders of
+    magnitude slower.  Everything else falls back to jnp (XLA compiles
+    that well on every backend).  An explicit ``"pallas"`` with a metric
+    the kernels don't implement is an error.
+    """
+    from repro.kernels.ops import KERNEL_METRICS
+    if backend in (None, "auto"):
+        if metric in KERNEL_METRICS and jax.default_backend() == "tpu":
+            return "pallas"
+        return "jnp"
+    get_stats_backend(backend)  # raises KeyError for unknown names
+    if backend == "pallas" and metric not in KERNEL_METRICS:
+        raise ValueError(f"metric {metric!r} has no Pallas kernel "
+                         f"(kernel metrics: {list(KERNEL_METRICS)}); "
+                         f"use backend='jnp'")
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# FitContext — per-fit state, explicit instead of instance-resident
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FitContext:
+    """Everything one ``BanditPAM.fit`` call threads between phases.
+
+    Historically this state (``_pic`` / ``_perm`` / ``_dwarm`` /
+    ``_free_rounds``) leaked onto the estimator instance, so a second
+    ``fit`` inherited stale cache state and pre-fit attribute access
+    crashed.  Holding it here makes the engine re-entrant: the instance
+    carries configuration only.
+
+    ``mode`` selects the cache regime:
+
+    * ``"none"`` — no distance cache; every round is fresh.
+    * ``"warm"`` — paper App 2.2: a fixed permutation plus an upfront warm
+      block of its first ``free_rounds`` column batches (static; no
+      write-through).
+    * ``"pic"``  — BanditPAM++ permutation-invariant cache, device-resident:
+      ``dwarm`` is a preallocated ``[n, n_rounds_max · B]`` buffer whose
+      first ``hw_rounds`` round-blocks are materialised; searches write
+      fresh blocks through from inside the bandit loop, so each column is
+      computed exactly once per fit.
+    """
+
+    mode: str                              # "none" | "warm" | "pic"
+    backend: str                           # registered stats-backend name
+    perm: Optional[jnp.ndarray] = None     # [n] fixed reference permutation
+    perm_idx: Optional[jnp.ndarray] = None  # [width] tiled permutation
+    perm_w: Optional[jnp.ndarray] = None   # [width] {0,1} padding weights
+    dwarm: Optional[jnp.ndarray] = None    # [n, width] distance columns
+    hw_rounds: Any = 0                     # int32 scalar: materialised rounds
+    free_rounds: int = 0                   # static warm-block rounds ("warm")

@@ -49,6 +49,10 @@ class FitReport:
     labels: Optional[np.ndarray] = None
     solver: str = ""
     metric: str = ""
+    # Wall-clock seconds per phase (e.g. "build" / "swap"), filled by
+    # solvers that time their phases (BanditPAM).  Unlike the ledger this
+    # is environment-dependent; benchmarks/core_bench.py medians it.
+    wall_by_phase: Dict[str, float] = field(default_factory=dict)
 
     def ledger(self) -> Dict[str, object]:
         """The unified fresh/cached distance-evaluation ledger as one dict

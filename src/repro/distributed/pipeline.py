@@ -7,7 +7,7 @@ inside ``shard_map``.  Autodiff through the schedule yields the standard
 GPipe backward (activations stashed per tick by the scan), so
 ``jax.grad`` works out of the box.
 
-Trade-off notes (DESIGN.md §6): for the assigned models on a pod-pair,
+Trade-off notes (docs/design.md §6): for the assigned models on a pod-pair,
 pod-as-data + int8-EF-compressed gradient all-reduce moves fewer cross-pod
 bytes than PP activations for train_4k (activations/tick: B·L·d·2 bytes x
 (M+S-1) ticks vs one compressed grad all-reduce); PP wins when the model

@@ -5,7 +5,7 @@ to physical mesh axes lives here so the same model code runs on 1 CPU
 device (rules unset -> no-op), a single pod (16x16 data/model) or the
 multi-pod mesh (2x16x16 pod/data/model).
 
-Physical conventions (DESIGN.md §5):
+Physical conventions (docs/design.md §5):
   batch   -> ("pod", "data")   data parallelism, hierarchical across pods
   heads   -> "model"           Megatron-style tensor parallelism (q heads)
   kv_heads-> replicated        GQA: kv head count (8) < model extent (16)

@@ -21,6 +21,17 @@ from . import pairwise as _pairwise
 from . import swap_g as _swap_g
 
 
+# Metrics implemented by the Pallas kernels (the registry-facing names;
+# the repro.api predict path and the repro.core.engine stats-backend
+# resolution both key off this tuple).
+KERNEL_METRICS = ("l2", "l2sq", "l1", "cosine")
+
+# Feature-axis tile budget: one [128, DK_MAX] f32 operand tile is 4 MiB of
+# VMEM.  Larger feature dims are split into dk-chunks whose additive cores
+# (squared distances / abs-sums / dot products) accumulate exactly.
+DK_MAX = 8192
+
+
 def _default_interpret() -> bool:
     return jax.default_backend() == "cpu"
 
@@ -36,17 +47,50 @@ def _pad_to(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
 
 
 def pairwise_distance(x: jnp.ndarray, y: jnp.ndarray, metric: str = "l2",
-                      *, tm: int = 128, tr: int = 128,
+                      *, tm: int = 128, tr: int = 128, dk: int = DK_MAX,
                       interpret: Optional[bool] = None) -> jnp.ndarray:
-    """[m, d] x [r, d] -> [m, r] via the tiled Pallas kernel."""
+    """[m, d] x [r, d] -> [m, r] via the tiled Pallas kernel.
+
+    Feature dims up to ``dk`` are VMEM-resident in one kernel pass.  Past
+    that budget the feature axis is split into ``dk``-column chunks and the
+    *additive* per-chunk core is accumulated across kernel calls — exact
+    for every metric here: squared distances and abs-sums are sums over
+    feature chunks, ``l2`` is the root of the accumulated ``l2sq``, and
+    ``cosine`` accumulates the raw MXU dot product (internal ``"dot"``
+    tile) with the O((m+r)·d) row norms computed outside the kernel.
+    """
     if interpret is None:
         interpret = _default_interpret()
-    m, r = x.shape[0], y.shape[0]
+    m, r, d = x.shape[0], y.shape[0], x.shape[1]
+    if dk % 128 != 0:
+        raise ValueError(f"dk must be a lane multiple of 128, got {dk}")
     xp = _pad_to(_pad_to(x, 1, 128), 0, tm)
     yp = _pad_to(_pad_to(y, 1, 128), 0, tr)
-    out = _pairwise.pairwise_kernel(xp, yp, metric=metric, tm=tm, tr=tr,
-                                    interpret=interpret)
-    return out[:m, :r]
+    if d <= dk:
+        out = _pairwise.pairwise_kernel(xp, yp, metric=metric, tm=tm, tr=tr,
+                                        interpret=interpret)
+        return out[:m, :r]
+
+    core = {"l2": "l2sq", "l2sq": "l2sq", "l1": "l1",
+            "cosine": "dot"}.get(metric)
+    if core is None:
+        raise ValueError(f"unknown metric {metric!r}")
+    acc = None
+    for lo in range(0, xp.shape[1], dk):
+        part = _pairwise.pairwise_kernel(
+            xp[:, lo:lo + dk], yp[:, lo:lo + dk], metric=core, tm=tm, tr=tr,
+            interpret=interpret)
+        acc = part if acc is None else acc + part
+    acc = acc[:m, :r]
+    if metric == "l2":
+        return jnp.sqrt(acc)
+    if metric == "cosine":
+        xf = x.astype(jnp.float32)
+        yf = y.astype(jnp.float32)
+        xn = jax.lax.rsqrt(jnp.maximum(jnp.sum(xf * xf, -1), 1e-30))
+        yn = jax.lax.rsqrt(jnp.maximum(jnp.sum(yf * yf, -1), 1e-30))
+        return 1.0 - acc * xn[:, None] * yn[None, :]
+    return acc
 
 
 def build_g_stats(x: jnp.ndarray, y: jnp.ndarray, dnear_b: jnp.ndarray,

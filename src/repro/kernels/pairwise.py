@@ -1,12 +1,14 @@
 """Pallas TPU kernel: tiled pairwise dissimilarity.
 
-TPU-native tiling (DESIGN.md hardware adaptation #3):
+TPU-native tiling (docs/design.md hardware adaptation #3):
 
 * grid = (m/TM, r/TR); each program owns one [TM, TR] output tile.
 * Feature dim D is resident in VMEM per tile (padded to a lane multiple of
-  128).  VMEM budget at TM=TR=128, D=16384, f32: x-tile 8 MiB + y-tile
-  8 MiB + out 64 KiB — comfortably under a v5e core's ~128 MiB VMEM; for
-  larger D the ops wrapper splits the feature axis.
+  128).  VMEM budget at TM=TR=128, D=8192, f32: x-tile 4 MiB + y-tile
+  4 MiB + out 64 KiB — comfortably under a v5e core's ~128 MiB VMEM; for
+  larger D the ops wrapper splits the feature axis into ``dk``-column
+  chunks and accumulates the additive per-chunk core (squared distances /
+  abs-sums / dot products) across kernel calls (``ops.pairwise_distance``).
 * MXU metrics (l2 / l2sq / cosine) are one ``dot_general`` with rank-1
   corrections: the [TM, D]x[D, TR] contraction is exactly the systolic
   array's shape (multiples of 128 on every matmul dim).
@@ -30,12 +32,19 @@ L1_CHUNK = 8
 
 
 def dist_tile(x: jnp.ndarray, y: jnp.ndarray, metric: str) -> jnp.ndarray:
-    """In-VMEM distance tile [TM, D] x [TR, D] -> [TM, TR] (f32 accum)."""
+    """In-VMEM distance tile [TM, D] x [TR, D] -> [TM, TR] (f32 accum).
+
+    ``"dot"`` is an internal metric (the raw MXU contraction) used by the
+    ops wrapper to accumulate cosine similarities across feature chunks
+    when D exceeds the VMEM tile budget; it is not registry-facing.
+    """
     x = x.astype(jnp.float32)
     y = y.astype(jnp.float32)
-    if metric in ("l2", "l2sq", "cosine"):
+    if metric in ("l2", "l2sq", "cosine", "dot"):
         xy = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
+        if metric == "dot":
+            return xy
         if metric == "cosine":
             xn = jax.lax.rsqrt(jnp.maximum(jnp.sum(x * x, -1), 1e-30))
             yn = jax.lax.rsqrt(jnp.maximum(jnp.sum(y * y, -1), 1e-30))

@@ -10,7 +10,7 @@ times and for clean layer-boundary remat).  Pattern kinds:
   mamba2+shared_attn          — zamba2: Mamba-2 then the weight-SHARED
                                 attention block on concat[h, x_embed]
 
-Frontend stubs (DESIGN.md §4): vision = precomputed patch embeddings
+Frontend stubs (docs/design.md §4): vision = precomputed patch embeddings
 (projected + concatenated before the stack); audio = per-codebook embedding
 sum with per-codebook output heads.
 

@@ -1,6 +1,6 @@
 """State-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
 
-TPU adaptation (DESIGN.md §3): the recurrences are *not* lowered as
+TPU adaptation (docs/design.md §3): the recurrences are *not* lowered as
 length-L sequential loops.
 
 * Mamba-1: `h_t = dA_t h_{t-1} + dBx_t` runs as a `jax.lax.associative_scan`

@@ -1,7 +1,7 @@
 """Elastic re-meshing: choose a production mesh for whatever host set
 survives, and re-shard a checkpoint onto it.
 
-Policy (DESIGN.md §6): the model axis is sacred (TP extent fixed by the
+Policy (docs/design.md §6): the model axis is sacred (TP extent fixed by the
 config's divisibility constraints); failures shrink the data/pod axes.
 Checkpoints store global shapes, so re-sharding is `device_put` with the
 new shardings — no resharding pass needed.

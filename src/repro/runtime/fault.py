@@ -1,7 +1,7 @@
 """Fault-tolerant training loop: periodic checkpoints, preemption-signal
 handling, bounded retry on transient step failures, straggler detection.
 
-Designed for the 1000+-node regime (DESIGN.md §6): the data pipeline is
+Designed for the 1000+-node regime (docs/design.md §6): the data pipeline is
 step-indexed and deterministic, so recovery = restore latest checkpoint +
 fast-forward the step counter.  Nothing here is CPU-container-specific —
 the same loop drives the multi-host launcher.

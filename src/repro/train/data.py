@@ -1,7 +1,7 @@
 """Deterministic, resumable synthetic LM data pipeline.
 
 Every batch is a pure function of ``(seed, step)`` — the keystone of the
-fault-tolerance story (DESIGN.md §6): any host can recompute any step's
+fault-tolerance story (docs/design.md §6): any host can recompute any step's
 shard after a failure, checkpoints only need to record the step counter,
 and elastic re-sharding needs no pipeline state migration.
 

@@ -1,6 +1,6 @@
 """AdamW with configurable moment dtype.
 
-The 480B MoE config stores first/second moments in bf16 (DESIGN.md
+The 480B MoE config stores first/second moments in bf16 (docs/design.md
 §Memory-fit) — update math still runs in f32 (moments are upcast, the
 new moments rounded back), so the quality cost is rounding, not range.
 No optax dependency: the whole optimizer is a pytree + two functions,

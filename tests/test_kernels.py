@@ -29,6 +29,35 @@ def test_pairwise_kernel_matches_ref(metric, shape):
                                rtol=2e-4, atol=2e-3)
 
 
+@pytest.mark.parametrize("metric", METRICS)
+def test_pairwise_feature_split_matches_ref(metric):
+    """D past the per-tile budget is split into dk-chunks whose additive
+    cores accumulate exactly (the promise in kernels/pairwise.py)."""
+    m, r, d = 48, 56, 700         # d > dk forces 3 chunks (256+256+188pad)
+    x, y = _data(m, r, d, seed=11)
+    got = ops.pairwise_distance(x, y, metric, dk=256, interpret=True)
+    want = ref.pairwise_ref(x, y, metric)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("metric", ["l2sq", "cosine"])
+def test_pairwise_feature_split_default_budget(metric):
+    """Past the default DK_MAX budget the split engages automatically."""
+    m, r, d = 16, 24, ops.DK_MAX + 256
+    x, y = _data(m, r, d, seed=12)
+    got = ops.pairwise_distance(x, y, metric, interpret=True)
+    want = ref.pairwise_ref(x, y, metric)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-3)
+
+
+def test_pairwise_split_rejects_unaligned_dk():
+    x, y = _data(8, 8, 300)
+    with pytest.raises(ValueError):
+        ops.pairwise_distance(x, y, "l2", dk=200, interpret=True)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_pairwise_kernel_dtypes(dtype):
     x, y = _data(64, 64, 64)
@@ -110,6 +139,47 @@ def test_swap_g_cached_kernel_matches_fresh(metric, m, b, d, k):
     for g, wnt in zip(got, want):
         np.testing.assert_allclose(np.asarray(g), np.asarray(wnt),
                                    rtol=2e-4, atol=5e-3)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_kernel_stats_parity_ragged_shapes(metric):
+    """Kernel/jnp stats parity when none of n, B, k is a 128 multiple —
+    the padding paths of every fused kernel against the Eq. 6/12 oracles
+    (all MXU metrics and l1)."""
+    m, b, d, k = 203, 77, 131, 7
+    x, y = _data(m, b, d, seed=21)
+    rng = np.random.default_rng(22)
+    w = jnp.asarray((rng.uniform(size=b) < 0.85).astype(np.float32))
+    # BUILD
+    dnear = jnp.asarray(
+        np.where(rng.uniform(size=b) < 0.3, np.inf,
+                 rng.uniform(0.5, 3.0, size=b)).astype(np.float32))
+    sums, sq, _ = ops.build_g_stats(x, y, dnear, w, metric=metric,
+                                    interpret=True)
+    want_sums, want_sq = ref.build_g_ref(x, y, dnear, w, metric)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(want_sums),
+                               rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(want_sq),
+                               rtol=2e-4, atol=5e-3)
+    # SWAP fresh + cache-served, sharing one oracle
+    d1 = jnp.asarray(rng.uniform(0.1, 2.0, size=b).astype(np.float32))
+    d2 = jnp.asarray((np.asarray(d1)
+                      + rng.uniform(0.1, 2.0, size=b)).astype(np.float32))
+    assign = jnp.asarray(rng.integers(0, k, size=b).astype(np.int32))
+    s_f, q_f, _ = ops.swap_g_stats(x, y, d1, d2, assign, w, k,
+                                   metric=metric, interpret=True)
+    want_s, want_q = ref.swap_g_ref(x, y, d1, d2, assign, w, k, metric)
+    np.testing.assert_allclose(np.asarray(s_f), np.asarray(want_s),
+                               rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(q_f), np.asarray(want_q),
+                               rtol=2e-4, atol=5e-3)
+    dxy = ref.pairwise_ref(x, y, metric)
+    s_c, q_c, _ = ops.swap_g_stats_cached(dxy, d1, d2, assign, w, k,
+                                          interpret=True)
+    np.testing.assert_allclose(np.asarray(s_c), np.asarray(want_s),
+                               rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(q_c), np.asarray(want_q),
+                               rtol=2e-4, atol=5e-3)
 
 
 def test_swap_g_cross_term():
