@@ -1,0 +1,94 @@
+"""Distributed-engine sweep: ``banditpam_dist`` on a simulated
+multi-device mesh vs the single-device solver at fixed (n, k).
+
+The device-count flag must be set before jax initialises, so the
+multi-device half runs in a subprocess; results come back as JSON and
+are emitted as the usual CSV rows (and serialised to
+``BENCH_distributed.json`` by ``benchmarks/run.py --json``).
+
+Knobs: ``REPRO_BENCH_DEVICES`` (simulated CPU devices, default 8),
+``REPRO_BENCH_PALLAS=1`` adds the interpret-mode Pallas backend row
+off-accelerator (same convention as ``core_bench``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from .common import FULL, emit
+
+_CHILD = textwrap.dedent("""
+    import os, sys, json, time
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=" + sys.argv[1])
+    n, k = int(sys.argv[2]), int(sys.argv[3])
+    backends = sys.argv[4].split(",")
+    from repro.api import KMedoids
+    from repro.core import datasets
+    from repro.core.distributed import default_mesh
+
+    data = datasets.make("mnist_like", n, seed=0)
+    mesh = default_mesh()
+    rows = {}
+    for solver in ("banditpam", "banditpam_dist"):
+        for backend in backends:
+            params = ({"mesh": mesh} if solver == "banditpam_dist"
+                      else {"baseline": "leader"})
+            t0 = time.perf_counter()
+            est = KMedoids(k, solver=solver, metric="l2", seed=0,
+                           backend=backend, **params).fit(data)
+            wall = time.perf_counter() - t0
+            r = est.report_
+            rows[f"{solver}[{backend}]"] = {
+                "loss": float(r.loss),
+                "wall_s": round(wall, 3),
+                "wall_by_phase": {p: round(v, 4)
+                                  for p, v in r.wall_by_phase.items()},
+                "ledger": r.ledger(),
+            }
+    print(json.dumps(rows))
+""")
+
+
+def sweep(n=None, k=5, devices=None, backends=None):
+    if n is None:
+        n = 1024 if FULL else 512
+    if devices is None:
+        devices = int(os.environ.get("REPRO_BENCH_DEVICES", "8"))
+    if backends is None:
+        backends = ["jnp"]
+        if os.environ.get("REPRO_BENCH_PALLAS", "0") == "1":
+            backends.append("pallas")
+    out = subprocess.run(
+        [sys.executable, "-c", _CHILD, str(devices), str(n), str(k),
+         ",".join(backends)],
+        capture_output=True, text=True, timeout=1800,
+        env=dict(os.environ, PYTHONPATH="src"))
+    if out.returncode != 0:
+        raise RuntimeError(f"distributed bench child failed:\n"
+                           f"{out.stderr[-2000:]}")
+    rows = json.loads(out.stdout.strip().splitlines()[-1])
+    for name, row in rows.items():
+        emit(f"distributed_{name}_n{n}_dev{devices}", row["wall_s"] * 1e6,
+             f"loss={row['loss']:.4f};fresh={row['ledger']['fresh']}")
+    return {"bench": "distributed", "n": int(n), "k": int(k),
+            "devices": int(devices), "rows": rows}
+
+
+def write_json(path="BENCH_distributed.json", **kw) -> str:
+    payload = sweep(**kw)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    emit("distributed_json_written", 0.0, path)
+    return path
+
+
+def run():
+    sweep()
+
+
+if __name__ == "__main__":
+    run()

@@ -5,9 +5,11 @@ paper-scale grids (default: CPU-quick grids).
 ``--json [PATH]`` runs only the machine-readable sweeps and writes them as
 JSON: the facade solver sweep to PATH (default ``BENCH_solvers.json``,
 loss + the fresh/cached distance-evaluation ledger per registered solver
-at fixed (n, k)) and the core-engine wall-clock sweep (per-solver ×
+at fixed (n, k)), the core-engine wall-clock sweep (per-solver ×
 stats-backend × fused/stepped driver, median of >= 3 reps) to
-``BENCH_core.json`` next to it.  ``--solver`` (repeatable) restricts the
+``BENCH_core.json`` next to it, and the sharded-engine sweep
+(``banditpam_dist`` on simulated devices vs the single-device solver) to
+``BENCH_distributed.json``.  ``--solver`` (repeatable) restricts the
 solver sweep to named solvers."""
 from __future__ import annotations
 
@@ -20,8 +22,9 @@ import traceback
 def main(argv=None) -> None:
     from repro.api import available_solvers
 
-    from . import (core_bench, kernels_bench, loss_quality, roofline,
-                   scaling_n, sigma_adaptivity, solvers, violation_pca)
+    from . import (core_bench, distributed_bench, kernels_bench,
+                   loss_quality, roofline, scaling_n, sigma_adaptivity,
+                   solvers, violation_pca)
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", nargs="?", const="BENCH_solvers.json",
@@ -34,14 +37,16 @@ def main(argv=None) -> None:
 
     print("name,us_per_call,derived")
     if args.json is not None:
+        outdir = os.path.dirname(args.json) or "."
         solvers.write_json(args.json, solvers=args.solver)
-        core_bench.write_json(
-            os.path.join(os.path.dirname(args.json) or ".",
-                         "BENCH_core.json"))
+        core_bench.write_json(os.path.join(outdir, "BENCH_core.json"))
+        distributed_bench.write_json(
+            os.path.join(outdir, "BENCH_distributed.json"))
         return
     failed = []
     for mod in (loss_quality, scaling_n, sigma_adaptivity, violation_pca,
-                solvers, core_bench, kernels_bench, roofline):
+                solvers, core_bench, distributed_bench, kernels_bench,
+                roofline):
         try:
             if mod is solvers:
                 mod.sweep(solvers=args.solver)

@@ -59,7 +59,9 @@ class KMedoids:
       predict_chunk: query rows per dispatch in predict/transform, bounding
         the resident ``[chunk, k]`` block.
       **solver_params: passed through to the solver (e.g. ``reuse="pic"``,
-        ``baseline="leader"``, ``max_neighbors=...``).
+        ``baseline="leader"``, ``max_neighbors=...``; for
+        ``solver="banditpam_dist"``, ``mesh=`` selects the device mesh the
+        sharded fit runs on — default: every local device).
     """
 
     def __init__(self, k: int, solver: str = "banditpam", metric="l2",

@@ -6,28 +6,23 @@ chunked over the query axis so the resident block never exceeds
 ``chunk × max(k, d)`` — on TPU that keeps each Pallas tile set comfortably
 inside VMEM regardless of how many points are being scored.
 
-Two backends compute the block:
-
-* ``"pallas"`` — ``repro.kernels.ops.pairwise_distance`` (the tiled MXU
-  kernel; interpret-mode on CPU).  Only the kernel-implemented metrics.
-* ``"jnp"`` — ``repro.core.distances.pairwise`` (jit'd XLA).  Any
-  registered metric, including user callables.
-
-``"auto"`` routes kernel-supported metrics through Pallas on TPU (the
-tiling the kernels are written for) and falls back to jnp everywhere
-else — CPU interpret-mode is correct but orders of magnitude slower, and
-non-TPU lowerings are unvalidated, so neither is ever auto-selected.
+The block is computed through the same ``StatsBackend`` registry the fit
+path uses (``repro.core.engine``): ``"pallas"`` is the tiled MXU kernel
+(interpret-mode on CPU), ``"jnp"`` the jit'd XLA path, and an out-of-tree
+``register_stats_backend`` name works here too.  Backend *resolution* is
+the engine's ``resolve_stats_backend`` — one "Pallas only on TPU" auto
+rule shared by fit and predict, so the policy cannot drift between the
+two surfaces.
 """
 
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distances import pairwise
+from repro.core.engine import get_stats_backend, resolve_stats_backend
 from repro.kernels import ops
 
 # Metrics implemented by the Pallas pairwise kernel (kernels/pairwise.py).
@@ -37,21 +32,19 @@ DEFAULT_CHUNK = 8192
 
 
 def resolve_backend(backend: Optional[str], metric: str) -> str:
-    """Normalise a backend argument to {"pallas", "jnp"}."""
-    if backend in (None, "auto"):
-        # TPU only: the kernels are TPU-tiled and unvalidated under other
-        # lowerings; "auto" never gambles the default path on them.
-        if metric in PALLAS_METRICS and jax.default_backend() == "tpu":
-            return "pallas"
-        return "jnp"
-    if backend not in ("pallas", "jnp"):
+    """Normalise a predict ``backend`` argument to a registered
+    stats-backend name.
+
+    Delegates to ``repro.core.engine.resolve_stats_backend`` — the single
+    owner of the auto/TPU selection rule — and only adapts the error
+    type: the predict surface historically raises ``ValueError`` for
+    unknown names (the engine registry getter raises ``KeyError``).
+    """
+    try:
+        return resolve_stats_backend(backend, metric)
+    except KeyError as e:
         raise ValueError(f"unknown predict backend {backend!r}; "
-                         f"expected 'auto', 'pallas', or 'jnp'")
-    if backend == "pallas" and metric not in PALLAS_METRICS:
-        raise ValueError(f"metric {metric!r} has no Pallas kernel "
-                         f"(kernel metrics: {list(PALLAS_METRICS)}); "
-                         f"use backend='jnp'")
-    return backend
+                         f"{e.args[0] if e.args else e}") from None
 
 
 def medoid_distances(x: np.ndarray, medoid_points: jnp.ndarray, metric: str,
@@ -59,17 +52,15 @@ def medoid_distances(x: np.ndarray, medoid_points: jnp.ndarray, metric: str,
                      chunk: int = DEFAULT_CHUNK) -> np.ndarray:
     """``[m, d]`` queries × ``[k, d]`` fitted medoids → ``[m, k]`` float32.
 
-    Chunked over the query axis; each chunk is one kernel/XLA dispatch.
+    Chunked over the query axis; each chunk is one dispatch through the
+    resolved stats backend's pairwise path.
     """
-    backend = resolve_backend(backend, metric)
+    be = get_stats_backend(resolve_backend(backend, metric))
     chunk = max(1, int(chunk))
     m = x.shape[0]
     out = np.empty((m, medoid_points.shape[0]), np.float32)
     for lo in range(0, m, chunk):
         xc = jnp.asarray(x[lo:lo + chunk], jnp.float32)
-        if backend == "pallas":
-            d = ops.pairwise_distance(xc, medoid_points, metric=metric)
-        else:
-            d = pairwise(xc, medoid_points, metric=metric)
-        out[lo:lo + chunk] = np.asarray(d, np.float32)
+        out[lo:lo + chunk] = np.asarray(
+            be.pairwise(xc, medoid_points, metric=metric), np.float32)
     return out

@@ -16,6 +16,12 @@ passed through from ``KMedoids(**solver_params)``.  The returned
 ``FitReport`` must carry medoids, loss, and the fresh/cached
 distance-evaluation ledger; ``labels`` / ``solver`` / ``metric`` fields are
 filled by the facade.
+
+``banditpam_dist`` is the sharded solver (``repro.core.distributed``): it
+additionally takes ``mesh=`` (a ``jax.sharding.Mesh`` whose axis names
+include ``"data"`` and/or ``"pod"``; defaults to a 1-D data mesh over
+every local device) and, like the other bandit solvers, the ``backend=``
+stats-backend kwarg.
 """
 
 from __future__ import annotations
@@ -90,6 +96,18 @@ def _banditpam_pp(data, k, *, metric, seed, **params):
     return BanditPAM(k, metric=metric, seed=seed, **params).fit(data)
 
 
+def _banditpam_dist(data, k, *, metric, seed, **params):
+    # Sharded BanditPAM over a device mesh (stratified per-shard reference
+    # sampling, psum-composed StatsBackend statistics).  Imported lazily so
+    # the registry stays import-light when the solver is never used.
+    from repro.core.distributed import DistributedBanditPAM, default_mesh
+    mesh = params.pop("mesh", None)
+    if mesh is None:
+        mesh = default_mesh()
+    return DistributedBanditPAM(k, mesh, metric=metric, seed=seed,
+                                **params).fit(data)
+
+
 def _pam(data, k, *, metric, seed, **params):
     # Deterministic; seed intentionally unused.
     return pam(data, k, metric=metric, fastpam1=False, **params)
@@ -118,6 +136,7 @@ def _voronoi(data, k, *, metric, seed, **params):
 
 register_solver("banditpam", _banditpam, accepts_backend=True)
 register_solver("banditpam_pp", _banditpam_pp, accepts_backend=True)
+register_solver("banditpam_dist", _banditpam_dist, accepts_backend=True)
 register_solver("pam", _pam)
 register_solver("fastpam1", _fastpam1)
 register_solver("fasterpam", _fasterpam)

@@ -78,8 +78,9 @@ from .adaptive import SearchResult, adaptive_search
 from .distances import get_metric
 from .engine import (_EXACT_CHUNK, _build_g, _ref_chunks, _swap_batch_stats,
                      _swap_terms, FitContext, cache_read_or_write,
-                     get_stats_backend, medoid_cache, pic_fresh_evals,
-                     resolve_stats_backend, total_loss)
+                     exact_build_means, exact_swap_means, get_stats_backend,
+                     medoid_cache, pic_fresh_evals, resolve_stats_backend,
+                     total_loss)
 from .report import FitReport
 
 __all__ = ["BanditPAM", "FitResult", "medoid_cache", "total_loss"]
@@ -180,17 +181,7 @@ def _build_step(data, dnear, med_mask, key, dwarm, hw, perm, *, backend: str,
         free = 0
 
     def exact_fn():
-        dist = get_metric(metric)
-        idx_np, w_np = _ref_chunks(n, _EXACT_CHUNK)
-        idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
-
-        def body(acc, iw):
-            i, wc = iw
-            g = _build_g(dist(data, data[i]), dnear[i])
-            return acc + jnp.sum(g * wc[None, :], axis=1), None
-
-        sums, _ = jax.lax.scan(body, jnp.zeros((n,), jnp.float32), (idx, w))
-        return sums / n
+        return exact_build_means(be, data, dnear, metric=metric)
 
     return adaptive_search(key, stats_fn=stats_fn, exact_fn=exact_fn,
                            n_arms=n, n_ref=n, batch_size=B, delta=delta,
@@ -306,19 +297,7 @@ def _swap_search(data, d1, d2, assign, med_mask, key, dwarm, hw, perm,
         free = 0
 
     def exact_fn():
-        dist = get_metric(metric)
-        idx_np, w_np = _ref_chunks(n, _EXACT_CHUNK)
-        idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
-
-        def body(acc, iw):
-            i, wc = iw
-            s, _ = _swap_batch_stats(dist(data, data[i]), d1[i], d2[i],
-                                     assign[i], wc, k)
-            return acc + s, None
-
-        sums, _ = jax.lax.scan(body, jnp.zeros((k * n,), jnp.float32),
-                               (idx, w))
-        return sums / n
+        return exact_swap_means(be, data, d1, d2, assign, k, metric=metric)
 
     # Candidates that are already medoids are not valid swap targets.
     active0 = jnp.tile(jnp.logical_not(med_mask)[None, :], (k, 1)).reshape(-1)

@@ -4,14 +4,32 @@ The multi-device execution of Algorithm 1 (docs/design.md hardware
 adaptations #2/#4, mesh conventions §2):
 
 * The reference set is sharded over the ``data`` (and ``pod``) mesh axes —
-  each device owns ``n / n_shards`` points.
+  each device owns ``ceil(n / n_shards)`` points (the sharded view is
+  padded to a shard multiple with cyclic copies; padding rows sit past
+  each shard's valid-draw range so they are never sampled, shards are
+  weighted by their valid-row count, and all-padding shards carry weight
+  0 — padding never reaches the statistics or the loss).
 * Reference sampling is **stratified**: every round each shard contributes
-  ``B / n_shards`` uniform draws from its local points (equal-size strata
-  ⇒ the estimator of mu_x stays unbiased; docs/design.md hardware adaptation #4).
+  ``B / n_shards`` uniform draws from its *valid* local points, weighted
+  by its stratum size so the estimator of mu_x stays unbiased even when
+  the strata are uneven (docs/design.md hardware adaptation #4).  Draws
+  are keyed by ``(seed, phase, selection/iteration, round, shard)`` — the
+  round counter is folded in explicitly, so no two rounds of a fit can
+  ever see identical reference batches (Theorem 1's confidence intervals
+  assume fresh, independent batches per round).
 * Each device computes the g-statistics of ALL arms against its local
-  reference draw; a single ``psum`` over the data axes yields the global
-  per-arm batch sums.  Arm elimination runs redundantly on every device
-  (cheap vector math, saves a broadcast).
+  reference draw **through the registered ``StatsBackend``**
+  (``repro.core.engine``): one backend ``pairwise`` block plus the
+  backend's from-distances statistics (for ``"pallas"`` that is the tiled
+  MXU pairwise kernel and the fused cached-stats SWAP kernel).  A single
+  ``psum`` over the data axes — the only collective, owned by this layer,
+  never by a backend — yields the global per-arm batch sums.  Arm
+  elimination runs redundantly on every device (cheap vector math, saves
+  a broadcast).
+* The SWAP loop follows the fused per-iteration step shape of the
+  single-device driver (docs/design.md hardware adaptation #5): one jit
+  dispatch per iteration (medoid-cache refresh + sharded bandit search +
+  candidate loss); the host only reads the accept/converge scalar.
 * The hierarchical pod axis composes transparently: ``psum`` over
   ("pod", "data") is the cross-pod reduction.
 
@@ -19,10 +37,15 @@ adaptations #2/#4, mesh conventions §2):
 shards (activations or dataset features) that already live sharded across
 the data axis of a training/serving mesh and returns medoid indices +
 assignments for data curation (examples/train_lm_curated.py).
+
+The facade front-end is ``repro.api.KMedoids(solver="banditpam_dist",
+mesh=..., backend=...)`` (``repro.api.registry``); without ``mesh=`` it
+spans every local device (``default_mesh``).
 """
 
 from __future__ import annotations
 
+import time
 from typing import Optional, Tuple
 
 import jax
@@ -31,31 +54,113 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .adaptive import adaptive_search
-from .banditpam import FitResult
-from .distances import get_metric
-from .engine import _build_g, _swap_batch_stats
+from .engine import (exact_build_means, exact_swap_means, get_stats_backend,
+                     medoid_cache, resolve_stats_backend, total_loss)
+from .report import FitReport
+
+__all__ = ["DistributedBanditPAM", "MedoidCurator", "default_mesh"]
+
+
+if hasattr(jax, "shard_map"):                       # jax >= 0.6
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+
+else:                                               # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=False)
 
 
 def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def default_mesh() -> Mesh:
+    """One-axis ``("data",)`` mesh spanning every local device — the
+    facade's default when ``KMedoids(solver="banditpam_dist")`` is given
+    no ``mesh=``."""
+    devs = np.asarray(jax.devices())
+    return Mesh(devs.reshape(devs.size), ("data",))
+
+
+# ---------------------------------------------------------------------------
+# Sharded-sampler RNG chain
+#
+# Key schedule: PRNGKey(seed ^ phase_tag) -> fold(selection/iteration)
+# -> fold(round) -> fold(shard).  Every level is folded in explicitly, so
+# two distinct (phase, step, round, shard) tuples draw independent
+# batches.  (Historically the chain keyed on the adaptive loop's
+# ref_idx[0] and ignored the round counter entirely, so two rounds whose
+# first sampled index collided silently reused identical reference
+# batches — breaking the cross-round independence the Theorem 1
+# confidence intervals assume.  tests/test_distributed_fit.py holds the
+# regression.)
+# ---------------------------------------------------------------------------
+
+_BUILD_TAG = 0x5EED
+_SWAP_TAG = 0x50A9
+
+
+def _phase_key(seed: int, tag: int, step) -> jax.Array:
+    """Base key of one bandit search: ``step`` is the BUILD selection
+    index or the SWAP iteration counter."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed ^ tag), step)
+
+
+def _round_key(phase_key: jax.Array, rnd) -> jax.Array:
+    """Per-round key: folds ``adaptive_search``'s round counter."""
+    return jax.random.fold_in(phase_key, rnd)
+
+
+def _shard_draws(round_key: jax.Array, ax, n_valid, b_loc: int) -> jnp.ndarray:
+    """Shard ``ax``'s stratified draw: ``b_loc`` uniform indices into its
+    valid local rows (``max(n_valid, 1)`` guards all-padding shards, whose
+    stratum weight is 0 anyway)."""
+    kk = jax.random.fold_in(round_key, ax)
+    return jax.random.randint(kk, (b_loc,), 0, jnp.maximum(n_valid, 1))
+
+
+# Compiled phase steps, shared across instances: jax.jit's cache is keyed
+# on the function object, so rebuilding the step closures every fit would
+# recompile both phases.  A module-level table (like the single-device
+# driver's module-level jits) makes repeated fits retrace-free even when
+# each fit constructs a fresh estimator — the facade registry does exactly
+# that.  Keys cover everything the closures capture (see ``_step_key``).
+_STEP_CACHE: dict = {}
+
+
 class DistributedBanditPAM:
     """BanditPAM over a sharded reference set.
 
-    data: [n, d] array (host); sharded internally over the mesh's data axes.
-    Semantics match `BanditPAM` (same medoids as PAM w.h.p.); the sampling
-    schedule differs (stratified per shard), so seeds are not comparable
-    with the single-device class.
+    data: [n, d] array (host); sharded internally over the mesh's data
+    axes (padded to a shard multiple when n is uneven — padding rows are
+    masked out of sampling, statistics, and loss).  Semantics match
+    `BanditPAM` (same medoids as PAM w.h.p.); the sampling schedule
+    differs (stratified per shard), so seeds are not comparable with the
+    single-device class.
+
+    ``backend`` selects the shard-local g-statistics path
+    (``repro.core.engine``): ``"auto"`` | ``"pallas"`` | ``"jnp"`` or any
+    registered stats backend.  The ``psum`` composition lives here; the
+    backends stay collective-free.
     """
 
     def __init__(self, k: int, mesh: Mesh, metric: str = "l2",
                  batch_size: int = 128, delta: Optional[float] = None,
-                 max_swaps: Optional[int] = None, seed: int = 0):
+                 max_swaps: Optional[int] = None, seed: int = 0,
+                 backend: str = "auto"):
         self.k = int(k)
         self.mesh = mesh
         self.metric = metric
         self.daxes = _data_axes(mesh)
+        if not self.daxes:
+            raise ValueError(f"mesh has no data axes; axis names must "
+                             f"include 'data' and/or 'pod', got "
+                             f"{mesh.axis_names}")
         self.n_shards = int(np.prod([mesh.shape[a] for a in self.daxes]))
         if batch_size % self.n_shards:
             batch_size += self.n_shards - batch_size % self.n_shards
@@ -63,157 +168,247 @@ class DistributedBanditPAM:
         self.delta = delta
         self.max_swaps = max_swaps if max_swaps is not None else 4 * self.k + 10
         self.seed = seed
+        self.backend = backend
+
+    def _step_key(self, phase: str, backend: str, n: int, delta: float):
+        """Cache key covering everything the compiled phase closures
+        capture: mesh (axes, shard count), backend, shapes, metric, and
+        the static batch/confidence parameters."""
+        return (phase, self.mesh, backend, n, self.k, self.metric,
+                self.batch_size, delta)
 
     # -- sharded stats ----------------------------------------------------
     def _shard_data(self, data: jnp.ndarray) -> jnp.ndarray:
+        """The sharded reference view: rows padded to a shard multiple
+        with cyclic copies (real points, so every metric stays NaN-free;
+        the stratum weights below zero them out of the statistics).  The
+        modular gather also covers n smaller than the mesh, where the
+        padding wraps around the data more than once."""
+        n = data.shape[0]
+        n_pad = self._n_loc(n) * self.n_shards
+        if n_pad != n:
+            data = data[jnp.arange(n_pad) % n]
         return jax.device_put(
             data, NamedSharding(self.mesh, P(self.daxes, None)))
 
-    def _build_stats_fn(self, data_sh, dnear, n: int):
-        """stats_fn(ref_idx, w, lead) with shard-local stratified sampling.
+    def _n_loc(self, n: int) -> int:
+        return -(-n // self.n_shards)
 
-        ref_idx here is reinterpreted: the adaptive loop's sampled global
-        indices are ignored; instead each shard draws B/n_shards local
-        rows keyed by the round's first index (deterministic)."""
+    def _flat_ax(self):
+        """The shard's flattened index over the (pod, data) strata."""
+        daxes = self.daxes
+        if len(daxes) == 1:
+            return lambda: jax.lax.axis_index(daxes[0])
+        m2 = self.mesh.shape[daxes[1]]
+        return lambda: (jax.lax.axis_index(daxes[0]) * m2
+                        + jax.lax.axis_index(daxes[1]))
+
+    def _stratum(self, n: int, n_loc: int, ax):
+        """(valid row count, stratum weight) of shard ``ax``.
+
+        The weight ``v·n_shards/n`` makes the equal-draws-per-shard
+        estimator unbiased under uneven strata: each draw of shard s
+        estimates mean_s, and sum_s (B/n_shards)·w_s·mean_s / B =
+        sum_s (v_s/n)·mean_s — the global mean.  Even split ⇒ w ≡ 1."""
+        v = jnp.clip(n - ax * n_loc, 0, n_loc)
+        return v, v.astype(jnp.float32) * self.n_shards / n
+
+    def _build_smap(self, be, n: int):
+        """Sharded BUILD statistics: ``smap(data_f, data_l, dnear_f,
+        round_key, lead) -> (sums, sqsums, cross)``, psum'd over the data
+        axes.  The shard-local stats go through the stats backend; only
+        the reduction is owned here."""
         metric = self.metric
         b_loc = self.batch_size // self.n_shards
-        daxes = self.daxes
-        dist = get_metric(metric)
-        n_loc = n // self.n_shards
+        n_loc = self._n_loc(n)
+        axfn = self._flat_ax()
 
-        def local(data_l, dnear_l, key, lead):
-            ax = jax.lax.axis_index(daxes[0]) if len(daxes) == 1 else (
-                jax.lax.axis_index(daxes[0]) * self.mesh.shape[daxes[1]]
-                + jax.lax.axis_index(daxes[1]))
-            kk = jax.random.fold_in(key, ax)
-            idx = jax.random.randint(kk, (b_loc,), 0, n_loc)
-            y = data_l[idx]
-            g = _build_g(dist(data_sh, y), dnear_l[idx])    # [n, b_loc]
-            sums = jax.lax.psum(jnp.sum(g, 1), daxes)
-            sq = jax.lax.psum(jnp.sum(g * g, 1), daxes)
-            cross = jax.lax.psum(g @ g[lead], daxes)
-            return sums, sq, cross
+        def local(data_f, data_l, dnear_f, rkey, lead):
+            ax = axfn()
+            v, cs = self._stratum(n, n_loc, ax)
+            idx = _shard_draws(rkey, ax, v, b_loc)
+            gidx = jnp.minimum(ax * n_loc + idx, n - 1)
+            w = jnp.ones((b_loc,), jnp.float32)
+            dxy = be.pairwise(data_f, data_l[idx], metric=metric)  # [n, b_loc]
+            s, q, c = be.build_stats_from_d(dxy, dnear_f[gidx], w, lead)
+            return (jax.lax.psum(s * cs, self.daxes),
+                    jax.lax.psum(q * (cs * cs), self.daxes),
+                    jax.lax.psum(c * (cs * cs), self.daxes))
 
-        # data_sh (targets) is replicated inside shard_map via closure; the
-        # sharded view provides the local reference rows.
-        smap = jax.shard_map(
-            local, mesh=self.mesh,
-            in_specs=(P(self.daxes, None), P(self.daxes), P(), P()),
-            out_specs=(P(), P(), P()), check_vma=False)
+        return _shard_map(local, self.mesh,
+                          in_specs=(P(), P(self.daxes, None), P(), P(), P()),
+                          out_specs=(P(), P(), P()))
 
-        def stats_fn(ref_idx, w, lead, rnd):
-            key = jax.random.fold_in(jax.random.PRNGKey(self.seed ^ 0x5eed),
-                                     ref_idx[0])
-            return smap(data_sh, dnear, key, lead)
-
-        return stats_fn
-
-    def _swap_stats_fn(self, data_sh, d1, d2, assign, n: int):
+    def _swap_smap(self, be, n: int):
+        """Sharded SWAP statistics over the flattened (medoid, candidate)
+        arm set: ``smap(data_f, data_l, d1_f, d2_f, assign_f, round_key,
+        lead)``.  On the Pallas backend the from-distances stats hit the
+        fused cached-stats kernel."""
         metric = self.metric
         k = self.k
         b_loc = self.batch_size // self.n_shards
-        daxes = self.daxes
-        dist = get_metric(metric)
-        n_loc = n // self.n_shards
+        n_loc = self._n_loc(n)
+        axfn = self._flat_ax()
 
-        def local(data_l, d1_l, d2_l, a_l, key, lead):
-            ax = jax.lax.axis_index(daxes[0]) if len(daxes) == 1 else (
-                jax.lax.axis_index(daxes[0]) * self.mesh.shape[daxes[1]]
-                + jax.lax.axis_index(daxes[1]))
-            kk = jax.random.fold_in(key, ax)
-            idx = jax.random.randint(kk, (b_loc,), 0, n_loc)
-            dxy = dist(data_sh, data_l[idx])
-            w = jnp.ones((b_loc,), dxy.dtype)
-            sums, sq, cross = _swap_batch_stats(
-                dxy, d1_l[idx], d2_l[idx], a_l[idx], w, k, lead=lead)
-            return (jax.lax.psum(sums, daxes), jax.lax.psum(sq, daxes),
-                    jax.lax.psum(cross, daxes))
+        def local(data_f, data_l, d1_f, d2_f, a_f, rkey, lead):
+            ax = axfn()
+            v, cs = self._stratum(n, n_loc, ax)
+            idx = _shard_draws(rkey, ax, v, b_loc)
+            gidx = jnp.minimum(ax * n_loc + idx, n - 1)
+            w = jnp.ones((b_loc,), jnp.float32)
+            dxy = be.pairwise(data_f, data_l[idx], metric=metric)
+            s, q, c = be.swap_stats_from_d(dxy, d1_f[gidx], d2_f[gidx],
+                                           a_f[gidx], w, k, lead)
+            return (jax.lax.psum(s * cs, self.daxes),
+                    jax.lax.psum(q * (cs * cs), self.daxes),
+                    jax.lax.psum(c * (cs * cs), self.daxes))
 
-        smap = jax.shard_map(
-            local, mesh=self.mesh,
-            in_specs=(P(self.daxes, None), P(self.daxes), P(self.daxes),
-                      P(self.daxes), P(), P()),
-            out_specs=(P(), P(), P()), check_vma=False)
+        return _shard_map(local, self.mesh,
+                          in_specs=(P(), P(self.daxes, None), P(), P(), P(),
+                                    P(), P()),
+                          out_specs=(P(), P(), P()))
 
-        def stats_fn(ref_idx, w, lead, rnd):
-            key = jax.random.fold_in(jax.random.PRNGKey(self.seed ^ 0x50a9),
-                                     ref_idx[0])
-            return smap(data_sh, d1, d2, assign, key, lead)
+    # -- fused phase steps -----------------------------------------------
+    def _make_build_step(self, be, n: int, delta: float):
+        """One BUILD medoid selection as ONE jit dispatch: sharded bandit
+        search + d_near/medoid-mask update on device; the host only reads
+        the winning index.  ``data``/``data_sh`` are jit arguments (not
+        closure constants) so XLA never constant-folds distance blocks at
+        compile time."""
+        smap = self._build_smap(be, n)
+        metric = self.metric
+        B = self.batch_size
 
-        return stats_fn
+        @jax.jit
+        def step(data, data_sh, dnear, med_mask, phase_key, search_key):
+            def stats_fn(ref_idx, w, lead, rnd):
+                # The adaptive loop's own (replacement-mode) draw is
+                # ignored; each shard draws locally from the round key.
+                return smap(data, data_sh, dnear, _round_key(phase_key, rnd),
+                            lead)
+
+            def exact_fn():
+                return exact_build_means(be, data, dnear, metric=metric)
+
+            sr = adaptive_search(search_key, stats_fn=stats_fn,
+                                 exact_fn=exact_fn, n_arms=n, n_ref=n,
+                                 batch_size=B, delta=delta,
+                                 active_init=jnp.logical_not(med_mask),
+                                 sampling="replacement", baseline="leader")
+            m = sr.best
+            dnear2 = jnp.minimum(
+                dnear, be.pairwise(data[m][None, :], data, metric=metric)[0])
+            med_mask2 = med_mask.at[m].set(True)
+            return m, dnear2, med_mask2, sr.n_evals, sr.rounds, sr.used_exact
+
+        return step
+
+    def _make_swap_iter(self, be, n: int, delta: float):
+        """One SWAP iteration as ONE fused jit dispatch (hardware
+        adaptation #5 shape): medoid-cache refresh + sharded bandit search
+        + candidate loss; only the accept/converge scalar is read on
+        host."""
+        smap = self._swap_smap(be, n)
+        metric = self.metric
+        B = self.batch_size
+        k = self.k
+
+        @jax.jit
+        def swap_iter(data, data_sh, medoids, med_mask, phase_key,
+                      search_key):
+            d1, d2, assign = medoid_cache(data, medoids, metric=metric)
+
+            def stats_fn(ref_idx, w, lead, rnd):
+                return smap(data, data_sh, d1, d2, assign,
+                            _round_key(phase_key, rnd), lead)
+
+            def exact_fn():
+                return exact_swap_means(be, data, d1, d2, assign, k,
+                                        metric=metric)
+
+            active0 = jnp.tile(jnp.logical_not(med_mask)[None, :],
+                               (k, 1)).reshape(-1)
+
+            def count_fn(active):
+                # FastPAM1: one distance per (x, y) serves all k arms (·, x).
+                any_x = jnp.any(active.reshape(k, n), axis=0)
+                return jnp.sum(any_x.astype(jnp.uint32))
+
+            sr = adaptive_search(search_key, stats_fn=stats_fn,
+                                 exact_fn=exact_fn, n_arms=k * n, n_ref=n,
+                                 batch_size=B, delta=delta,
+                                 active_init=active0, count_fn=count_fn,
+                                 sampling="replacement", baseline="leader")
+            m_idx = sr.best // n
+            x_idx = sr.best % n
+            cand = medoids.at[m_idx].set(x_idx)
+            new_loss = total_loss(data, cand, metric=metric)
+            return (sr.best, new_loss, cand, sr.n_evals, sr.rounds,
+                    sr.used_exact)
+
+        return swap_iter
 
     # -- fit --------------------------------------------------------------
-    def fit(self, data) -> FitResult:
+    def fit(self, data) -> FitReport:
         data = jnp.asarray(data, jnp.float32)
         n = data.shape[0]
-        assert n % self.n_shards == 0, (n, self.n_shards)
-        dist = get_metric(self.metric)
+        if n <= self.k:
+            raise ValueError("need n > k")
+        backend = resolve_stats_backend(self.backend, self.metric)
+        be = get_stats_backend(backend)
         data_sh = self._shard_data(data)
         key = jax.random.PRNGKey(self.seed)
-        res = FitResult(medoids=np.zeros(self.k, np.int64), loss=np.inf,
-                        n_swaps=0, converged=False, distance_evals=0)
+        res = FitReport(medoids=np.zeros(self.k, np.int64), loss=np.inf,
+                        n_swaps=0, converged=False, distance_evals=0,
+                        solver="banditpam_dist", metric=str(self.metric))
 
-        # BUILD — replacement-mode sampling (stratified draws), exact
-        # fallback disabled by supplying the exact pass distributed too.
+        # BUILD — one jit dispatch per selection, replacement-mode bandit
+        # rounds over stratified shard-local draws.
+        t0 = time.perf_counter()
+        delta = self.delta if self.delta is not None else 1.0 / (1000.0 * n)
+        ck = self._step_key("build", backend, n, delta)
+        if ck not in _STEP_CACHE:
+            _STEP_CACHE[ck] = self._make_build_step(be, n, delta)
+        build_step = _STEP_CACHE[ck]
         dnear = jnp.full((n,), jnp.inf, jnp.float32)
         med_mask = jnp.zeros((n,), jnp.bool_)
         medoids = []
-        delta = self.delta if self.delta is not None else 1.0 / (1000.0 * n)
-        evals = 0
-        for _ in range(self.k):
+        build_evals = 0
+        for i in range(self.k):
             key, sub = jax.random.split(key)
-            stats_fn = self._build_stats_fn(data_sh, dnear, n)
-
-            def exact_fn():
-                dxy = dist(data, data)
-                g = _build_g(dxy, dnear)
-                return jnp.mean(g, axis=1)
-
-            sr = adaptive_search(sub, stats_fn=stats_fn, exact_fn=exact_fn,
-                                 n_arms=n, n_ref=n,
-                                 batch_size=self.batch_size, delta=delta,
-                                 active_init=jnp.logical_not(med_mask),
-                                 sampling="replacement", baseline="leader")
-            m = int(sr.best)
-            medoids.append(m)
-            med_mask = med_mask.at[m].set(True)
-            dnear = jnp.minimum(dnear, dist(data[m][None], data)[0])
-            evals += int(sr.n_evals) + n
+            m, dnear, med_mask, n_evals, rounds, _ = build_step(
+                data, data_sh, dnear, med_mask,
+                _phase_key(self.seed, _BUILD_TAG, i), sub)
+            medoids.append(int(m))
+            build_evals += int(n_evals) + n          # + n: d_near update
+            res.build_rounds.append(int(rounds))
         med = jnp.asarray(medoids, jnp.int32)
+        res.evals_by_phase["build"] = build_evals
+        jax.block_until_ready(dnear)
+        res.wall_by_phase["build"] = time.perf_counter() - t0
 
-        # SWAP
-        loss = float(jnp.sum(jnp.min(dist(data, data[med]), 1)))
-        delta_s = self.delta if self.delta is not None else 1.0 / (1000.0 * self.k * n)
+        # SWAP — the fused per-iteration step; host reads accept/converge.
+        t0 = time.perf_counter()
+        delta_s = (self.delta if self.delta is not None
+                   else 1.0 / (1000.0 * self.k * n))
+        ck = self._step_key("swap", backend, n, delta_s)
+        if ck not in _STEP_CACHE:
+            _STEP_CACHE[ck] = self._make_swap_iter(be, n, delta_s)
+        swap_iter = _STEP_CACHE[ck]
+        loss = float(total_loss(data, med, metric=self.metric))
+        swap_evals = 0
         converged = False
-        for _ in range(self.max_swaps):
-            dmat = dist(data, data[med])
-            assign = jnp.argmin(dmat, 1).astype(jnp.int32)
-            d1 = jnp.min(dmat, 1)
-            d2 = jnp.min(dmat.at[jnp.arange(n), assign].set(jnp.inf), 1)
-            evals += n * self.k
+        for t in range(self.max_swaps):
             key, sub = jax.random.split(key)
-            stats_fn = self._swap_stats_fn(data_sh, d1, d2, assign, n)
-
-            def exact_fn():
-                dxy = dist(data, data)
-                w = jnp.ones((n,), jnp.float32)
-                s, _, _ = _swap_batch_stats(dxy, d1, d2, assign, w, self.k,
-                                            lead=jnp.int32(0))
-                return s / n
-
-            active0 = jnp.tile(jnp.logical_not(med_mask)[None], (self.k, 1)
-                               ).reshape(-1)
-            sr = adaptive_search(sub, stats_fn=stats_fn, exact_fn=exact_fn,
-                                 n_arms=self.k * n, n_ref=n,
-                                 batch_size=self.batch_size, delta=delta_s,
-                                 active_init=active0,
-                                 sampling="replacement", baseline="leader")
-            evals += int(sr.n_evals)
-            m_idx, x_idx = divmod(int(sr.best), n)
-            cand = med.at[m_idx].set(x_idx)
-            new_loss = float(jnp.sum(jnp.min(dist(data, data[cand]), 1)))
-            evals += n * self.k
+            best, new_loss_d, cand, n_evals, rounds, used_exact = swap_iter(
+                data, data_sh, med, med_mask,
+                _phase_key(self.seed, _SWAP_TAG, t), sub)
+            # cache refresh (n·k) + candidate loss (n·k) + bandit rounds
+            swap_evals += 2 * n * self.k + int(n_evals)
+            res.swap_exact_fallbacks += int(used_exact)
+            new_loss = float(new_loss_d)
             if new_loss < loss - 1e-7 * max(1.0, abs(loss)):
+                m_idx, x_idx = divmod(int(best), n)
                 old = int(med[m_idx])
                 med = cand
                 med_mask = med_mask.at[old].set(False).at[x_idx].set(True)
@@ -222,33 +417,44 @@ class DistributedBanditPAM:
             else:
                 converged = True
                 break
+        res.evals_by_phase["swap"] = swap_evals
+        res.wall_by_phase["swap"] = time.perf_counter() - t0
 
-        res.medoids = np.asarray(med)
+        res.medoids = np.asarray(med, np.int64)
         res.loss = loss
         res.n_swaps = len(res.swap_history)
         res.converged = converged
-        res.distance_evals = evals
+        res.distance_evals = sum(v for ph, v in res.evals_by_phase.items()
+                                 if not ph.endswith("_cached"))
         return res
 
 
 class MedoidCurator:
     """Embedding-space curation for the LM stack: cluster a (possibly
     sharded) embedding table with distributed BanditPAM, return medoid
-    indices + assignments for coreset batch selection."""
+    indices + assignments for coreset batch selection.
+
+    The distributed path is gated on the *mesh's own* device count — a
+    1-device mesh on a multi-device host runs the single-device solver,
+    and a multi-device sub-mesh is honoured even when it covers only part
+    of the host."""
 
     def __init__(self, k: int, mesh: Optional[Mesh] = None,
-                 metric: str = "cosine", seed: int = 0):
+                 metric: str = "cosine", seed: int = 0,
+                 backend: str = "auto"):
         self.k, self.mesh, self.metric, self.seed = k, mesh, metric, seed
+        self.backend = backend
 
     def curate(self, embeddings) -> Tuple[np.ndarray, np.ndarray]:
-        from .banditpam import BanditPAM, medoid_cache
+        from .banditpam import BanditPAM
         emb = jnp.asarray(embeddings, jnp.float32)
-        if self.mesh is not None and len(jax.devices()) > 1:
+        if self.mesh is not None and self.mesh.devices.size > 1:
             fit = DistributedBanditPAM(self.k, self.mesh, metric=self.metric,
-                                       seed=self.seed).fit(emb)
+                                       seed=self.seed,
+                                       backend=self.backend).fit(emb)
         else:
             fit = BanditPAM(self.k, metric=self.metric, seed=self.seed,
-                            baseline="leader").fit(emb)
+                            baseline="leader", backend=self.backend).fit(emb)
         _, _, assign = medoid_cache(emb, jnp.asarray(fit.medoids),
                                     metric=self.metric)
         return fit.medoids, np.asarray(assign)

@@ -34,7 +34,11 @@ making ``fit`` re-entrant.
 The shared g-statistics math (``_build_g``, ``_swap_terms``,
 ``_swap_batch_stats``), the medoid cache, and the exact loss live here so
 ``core.banditpam``, ``core.pam``, and ``core.distributed`` all draw from
-one definition.  See docs/design.md for the numbered hardware adaptations.
+one definition.  Backends are collective-free by contract: the sharded
+driver (``core.distributed``) calls ``pairwise`` + ``*_stats_from_d`` on
+shard-local blocks inside ``shard_map`` and composes the cross-shard
+``psum`` itself, so every registered backend reaches the distributed path
+unchanged.  See docs/design.md for the numbered hardware adaptations.
 """
 
 from __future__ import annotations
@@ -47,7 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .distances import get_metric
+from .distances import get_metric, pairwise
 
 _EXACT_CHUNK = 512  # reference-chunk size for exact fallback passes
 
@@ -81,6 +85,45 @@ def _ref_chunks(n_ref: int, chunk: int) -> Tuple[np.ndarray, np.ndarray]:
     w = (idx < n_ref).astype(np.float32)
     idx = np.minimum(idx, n_ref - 1)
     return idx.reshape(n_chunks, chunk), w.reshape(n_chunks, chunk)
+
+
+def exact_build_means(be, data, dnear, *, metric: str) -> jnp.ndarray:
+    """Exact BUILD objective over the full reference set (Algorithm 1
+    lines 13–15 fallback): per-arm mean g, [n].  Chunked scan through the
+    backend's pairwise path so the resident block stays bounded — the one
+    definition shared by the single-device and sharded drivers."""
+    n = data.shape[0]
+    idx_np, w_np = _ref_chunks(n, _EXACT_CHUNK)
+    idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
+
+    def body(acc, iw):
+        i, w_i = iw
+        dxy = be.pairwise(data, data[i], metric=metric)
+        s, _, _ = be.build_stats_from_d(dxy, dnear[i], w_i, None)
+        return acc + s, None
+
+    sums, _ = jax.lax.scan(body, jnp.zeros((n,), jnp.float32), (idx, w))
+    return sums / n
+
+
+def exact_swap_means(be, data, d1, d2, assign, k: int, *, metric: str
+                     ) -> jnp.ndarray:
+    """Exact SWAP objective over the flattened (medoid, candidate) arm
+    set: per-arm mean g, [k·n]; same chunked backend-routed form as
+    :func:`exact_build_means`."""
+    n = data.shape[0]
+    idx_np, w_np = _ref_chunks(n, _EXACT_CHUNK)
+    idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
+
+    def body(acc, iw):
+        i, w_i = iw
+        dxy = be.pairwise(data, data[i], metric=metric)
+        s, _, _ = be.swap_stats_from_d(dxy, d1[i], d2[i], assign[i], w_i, k,
+                                       None)
+        return acc + s, None
+
+    sums, _ = jax.lax.scan(body, jnp.zeros((k * n,), jnp.float32), (idx, w))
+    return sums / n
 
 
 # ---------------------------------------------------------------------------
@@ -176,7 +219,10 @@ class JnpStatsBackend:
     name = "jnp"
 
     def pairwise(self, x, y, *, metric):
-        return get_metric(metric)(x, y)
+        # The jit'd entrypoint: inlined when already inside a trace, and
+        # compiled (not op-by-op eager) for eager callers like the
+        # chunked predict path.
+        return pairwise(x, y, metric=metric)
 
     # -- BUILD ----------------------------------------------------------
     def build_stats(self, data, ref_idx, dnear_b, w, lead, *, metric):

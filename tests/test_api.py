@@ -12,6 +12,7 @@ from repro.api import registry as api_registry
 from repro.core import (BanditPAM, FitReport, clara, clarans, datasets,
                         fasterpam, pairwise, pam, resolve_metric, total_loss,
                         voronoi_iteration)
+from repro.core.distributed import DistributedBanditPAM, default_mesh
 
 N, K = 300, 3
 
@@ -20,6 +21,10 @@ LEGACY = {
     "banditpam": ({}, lambda d: BanditPAM(K, metric="l2", seed=0).fit(d)),
     "banditpam_pp": ({}, lambda d: BanditPAM(K, metric="l2", seed=0,
                                              reuse="pic").fit(d)),
+    # On a single-device host default_mesh() is a 1-device mesh — the
+    # sharded machinery (shard_map + psum + stratified draws) still runs.
+    "banditpam_dist": ({}, lambda d: DistributedBanditPAM(
+        K, default_mesh(), metric="l2", seed=0).fit(d)),
     "pam": ({}, lambda d: pam(d, K, metric="l2", fastpam1=False)),
     "fastpam1": ({}, lambda d: pam(d, K, metric="l2", fastpam1=True)),
     "fasterpam": ({}, lambda d: fasterpam(d, K, metric="l2", seed=0)),

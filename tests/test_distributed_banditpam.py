@@ -1,32 +1,25 @@
 """Distributed BanditPAM equivalence: 8 simulated devices (subprocess so
-the device-count flag doesn't leak into other tests), sharded references,
-result must match exact PAM."""
+the device-count flag doesn't leak into other tests), sharded references
+over a hierarchical (pod, data) mesh, result must match exact PAM."""
 import json
+import os
+import pathlib
 import subprocess
 import sys
 import textwrap
-
-import jax
-import pytest
-
-if not hasattr(jax.sharding, "AxisType"):
-    # The mesh/shard_map API used here (and by repro.core.distributed)
-    # needs jax >= 0.6; skip cleanly on older installs.
-    pytest.skip("needs jax.sharding.AxisType (jax >= 0.6)",
-                allow_module_level=True)
 
 _SUBPROC = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, json, numpy as np
+    from jax.sharding import Mesh
     from repro.core import datasets, pam
     from repro.core.distributed import DistributedBanditPAM
 
     data = datasets.mnist_like(512, seed=3)
     p = pam(data, k=3, metric="l2")
 
-    mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("pod", "data"))
     d = DistributedBanditPAM(3, mesh, metric="l2", seed=0).fit(data)
     print(json.dumps({
         "pam": sorted(int(m) for m in p.medoids),
@@ -40,8 +33,8 @@ _SUBPROC = textwrap.dedent("""
 def test_distributed_matches_pam():
     out = subprocess.run(
         [sys.executable, "-c", _SUBPROC], capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
-        timeout=900)
+        cwd=str(pathlib.Path(__file__).resolve().parent.parent),
+        env=dict(os.environ, PYTHONPATH="src"), timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
     res = json.loads(out.stdout.strip().splitlines()[-1])
     # Theorem 2 whp-match; loss equality is the hard invariant
