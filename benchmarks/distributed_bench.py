@@ -1,5 +1,13 @@
 """Distributed-engine sweep: ``banditpam_dist`` on a simulated
-multi-device mesh vs the single-device solver at fixed (n, k).
+multi-device mesh vs the single-device solver at fixed (n, k), including
+the ``reuse="pic"`` sharded-cache row.
+
+Per row it records the loss, wall clock, the fresh/cached ledger, the
+cached fraction, and the driver's per-phase jit dispatch counts — and
+ASSERTS that the fused sharded BUILD issued ONE dispatch for the whole
+phase (not one per selection): the regression guard for the
+fori_loop-fused BUILD, enforced wherever the bench runs (CI uploads the
+JSON as an artifact).
 
 The device-count flag must be set before jax initialises, so the
 multi-device half runs in a subprocess; results come back as JSON and
@@ -33,24 +41,53 @@ _CHILD = textwrap.dedent("""
     data = datasets.make("mnist_like", n, seed=0)
     mesh = default_mesh()
     rows = {}
-    for solver in ("banditpam", "banditpam_dist"):
+    cases = [("banditpam", {"baseline": "leader"}),
+             ("banditpam_dist", {"mesh": mesh}),
+             ("banditpam_dist[pic]", {"mesh": mesh, "reuse": "pic"})]
+    for name, params in cases:
+        solver = name.split("[")[0]
         for backend in backends:
-            params = ({"mesh": mesh} if solver == "banditpam_dist"
-                      else {"baseline": "leader"})
             t0 = time.perf_counter()
             est = KMedoids(k, solver=solver, metric="l2", seed=0,
                            backend=backend, **params).fit(data)
             wall = time.perf_counter() - t0
             r = est.report_
-            rows[f"{solver}[{backend}]"] = {
+            led = r.ledger()
+            total = led["fresh"] + led["cached"]
+            rows[f"{name}[{backend}]"] = {
                 "loss": float(r.loss),
                 "wall_s": round(wall, 3),
                 "wall_by_phase": {p: round(v, 4)
                                   for p, v in r.wall_by_phase.items()},
-                "ledger": r.ledger(),
+                "ledger": led,
+                "cached_fraction": round(led["cached"] / total, 4),
+                "dispatches_by_phase": dict(r.dispatches_by_phase),
+                "n_swaps": int(r.n_swaps),
+                "converged": bool(r.converged),
             }
     print(json.dumps(rows))
 """)
+
+
+def _assert_single_dispatch_build(rows: dict) -> None:
+    """CI guard: the fused sharded BUILD is one jit dispatch per phase."""
+    for name, row in rows.items():
+        if not name.startswith("banditpam_dist"):
+            continue
+        d = row["dispatches_by_phase"]
+        if d.get("build") != 1:
+            raise AssertionError(
+                f"{name}: sharded BUILD issued {d.get('build')} dispatches "
+                f"— the fori_loop fusion regressed (expected 1 per phase)")
+        # One fused step per iteration: every accepted swap plus — only
+        # when the fit converged — the final non-improving check.  A fit
+        # that exhausts max_swaps ends on an accepted swap (no +1).
+        want_swap = row["n_swaps"] + (1 if row["converged"] else 0)
+        if d.get("swap") != want_swap:
+            raise AssertionError(
+                f"{name}: sharded SWAP issued {d.get('swap')} dispatches "
+                f"for {row['n_swaps']} accepted swaps (expected "
+                f"{want_swap} fused steps)")
 
 
 def sweep(n=None, k=5, devices=None, backends=None):
@@ -71,9 +108,12 @@ def sweep(n=None, k=5, devices=None, backends=None):
         raise RuntimeError(f"distributed bench child failed:\n"
                            f"{out.stderr[-2000:]}")
     rows = json.loads(out.stdout.strip().splitlines()[-1])
+    _assert_single_dispatch_build(rows)
     for name, row in rows.items():
         emit(f"distributed_{name}_n{n}_dev{devices}", row["wall_s"] * 1e6,
-             f"loss={row['loss']:.4f};fresh={row['ledger']['fresh']}")
+             f"loss={row['loss']:.4f};fresh={row['ledger']['fresh']};"
+             f"cached_frac={row['cached_fraction']};"
+             f"build_dispatches={row['dispatches_by_phase'].get('build')}")
     return {"bench": "distributed", "n": int(n), "k": int(k),
             "devices": int(devices), "rows": rows}
 

@@ -59,9 +59,11 @@ class KMedoids:
       predict_chunk: query rows per dispatch in predict/transform, bounding
         the resident ``[chunk, k]`` block.
       **solver_params: passed through to the solver (e.g. ``reuse="pic"``,
+        ``cache_width=...`` to cap the PIC column ring,
         ``baseline="leader"``, ``max_neighbors=...``; for
         ``solver="banditpam_dist"``, ``mesh=`` selects the device mesh the
-        sharded fit runs on — default: every local device).
+        sharded fit runs on — default: every local device — and
+        ``reuse="pic"`` enables the mesh-sharded PIC cache).
     """
 
     def __init__(self, k: int, solver: str = "banditpam", metric="l2",

@@ -21,7 +21,9 @@ filled by the facade.
 additionally takes ``mesh=`` (a ``jax.sharding.Mesh`` whose axis names
 include ``"data"`` and/or ``"pod"``; defaults to a 1-D data mesh over
 every local device) and, like the other bandit solvers, the ``backend=``
-stats-backend kwarg.
+stats-backend kwarg plus the BanditPAM++ reuse knobs (``reuse="pic"``
+for the mesh-sharded PIC column ring, ``cache_width=`` for its bounded
+width — see ``repro.core.pic_cache``).
 """
 
 from __future__ import annotations

@@ -61,6 +61,19 @@ import jax.numpy as jnp
 # first-batch returns are constant (e.g. duplicated points).
 SIGMA_FLOOR = 1e-8
 
+# Deterministic tie-break for the differenced-CI (leader) elimination
+# rule: the leader's own differenced statistics are exactly 0, so
+# near-leader arms' margins sit on floating-point ties where a ~1e-6
+# backend-dependent distance delta (Pallas vs jnp) used to decide kills.
+# Requiring the margin to clear a small fraction of the arm's RAW
+# confidence width — orders of magnitude above fp noise, orders of
+# magnitude below any gap the rule can genuinely resolve — makes the
+# per-round survivor sets (and hence the eval ledgers) identical across
+# stats backends.  A kill this margin delays is re-taken within a few
+# rounds (the CI shrinks as 1/sqrt(t)), so the variance-reduction win is
+# untouched.  See docs/design.md, Testing conventions.
+LEAD_TIE_REL = 1e-2
+
 
 class SearchResult(NamedTuple):
     best: jnp.ndarray        # int32 index into the (flattened) arm set
@@ -119,7 +132,10 @@ def adaptive_search(
     baseline: str = "none",
     stop_when_positive: bool = False,
     perm: Optional[jnp.ndarray] = None,
+    perm_idx: Optional[jnp.ndarray] = None,
+    perm_w: Optional[jnp.ndarray] = None,
     free_rounds=0,
+    free_lo=0,
     init_sums: Optional[jnp.ndarray] = None,
     init_sqsums: Optional[jnp.ndarray] = None,
     init_rounds=0,
@@ -145,10 +161,21 @@ def adaptive_search(
         host-side cache materialisation would pay is gone.  The final aux
         is returned as ``SearchResult.aux``.
       perm / free_rounds: paper App 2.2 cache — reuse a FIXED reference
-        permutation across calls; the first ``free_rounds`` rounds (a Python
-        int or a traced int32 scalar) hit the caller's distance cache and
-        cost zero *new* evaluations (they are tallied in ``n_evals_cached``
-        instead).
+        permutation across calls; rounds in ``[free_lo, free_rounds)``
+        (Python ints or traced int32 scalars) hit the caller's distance
+        cache and cost zero *new* evaluations (they are tallied in
+        ``n_evals_cached`` instead).  ``free_lo > 0`` is the bounded-width
+        PIC cache (``repro.core.pic_cache``): rounds below the resident
+        window were recycled, so the caller recomputes them — they count
+        as fresh again.
+      perm_idx / perm_w: explicit pre-tiled permutation layout (position
+        index and {0,1} validity weight per reference slot), overriding
+        the cyclic tiling of ``perm``.  This is how the sharded driver
+        runs permutation sampling over per-shard stratified permutations:
+        round ``r`` occupies slots ``[r·B, (r+1)·B)`` with shard ``s``
+        owning the ``[s·b_loc, (s+1)·b_loc)`` sub-slice.  The layout must
+        cover every reference point exactly once among its weight-1 slots
+        (``Σ perm_w == n_ref``) so the budget exhausts exactly.
       init_sums / init_sqsums / init_rounds: BanditPAM++ permutation-
         invariant caching (PIC).  Seed the search with per-arm Σg / Σg²
         already accumulated over the first ``init_rounds`` batches of the
@@ -170,9 +197,12 @@ def adaptive_search(
         raise ValueError(f"unknown sampling mode {sampling!r}")
     if baseline not in ("none", "leader"):
         raise ValueError(f"unknown baseline mode {baseline!r}")
-    if init_sums is not None and (sampling != "permutation" or perm is None):
+    if init_sums is not None and (
+            sampling != "permutation" or (perm is None and perm_idx is None)):
         raise ValueError("carried statistics require permutation sampling "
                          "over an explicit fixed perm (PIC invariant)")
+    if (perm_idx is None) != (perm_w is None):
+        raise ValueError("perm_idx and perm_w must be given together")
     if delta is None:
         delta = 1.0 / (1000.0 * n_arms)
     if count_fn is None:
@@ -185,7 +215,7 @@ def adaptive_search(
     active0 = jnp.ones((n_arms,), jnp.bool_) if active_init is None else active_init
 
     n_rounds_max = -(-n_ref // B)
-    if use_perm:
+    if use_perm and perm_idx is None:
         if perm is None:
             key, pkey = jax.random.split(key)
             perm = jax.random.permutation(pkey, n_ref).astype(jnp.int32)
@@ -262,7 +292,14 @@ def adaptive_search(
             mu_d = d_sums / n_post_f
             ci_d = sigma_d * jnp.sqrt(log_term / n_post_f)
             ucb_d = jnp.where(s.active, mu_d + ci_d, jnp.inf)
-            kill_d = jnp.logical_and(n_post > 0, (mu_d - ci_d) > jnp.min(ucb_d))
+            # Deterministic fp-tie break (see LEAD_TIE_REL): the margin
+            # must clear a sliver of the arm's RAW confidence width, and
+            # the leader is excluded from its own elimination test — its
+            # differenced margin is structurally an exact-zero tie.
+            eps_d = LEAD_TIE_REL * sigma * jnp.sqrt(log_term / n_post_f)
+            kill_d = jnp.logical_and(
+                n_post > 0, (mu_d - ci_d) > jnp.min(ucb_d) + eps_d)
+            kill_d = jnp.logical_and(kill_d, jnp.arange(n_arms) != s.lead)
             kill = jnp.logical_or(kill_raw, kill_d)
             # pilot leader: fixed after the first round
             lead = jnp.where(s.lead >= 0, s.lead,
@@ -274,7 +311,10 @@ def adaptive_search(
             d_sums, d_sq, sigma_d, n_post = s.d_sums, s.d_sq, s.sigma_d, s.n_post
 
         active = jnp.logical_and(s.active, jnp.logical_not(kill))
-        fresh = (s.rounds >= free_rounds).astype(jnp.uint32)
+        # Cache-served rounds are [free_lo, free_rounds); rounds below the
+        # resident window (recycled slots) are fresh recomputations.
+        fresh = jnp.logical_or(s.rounds >= free_rounds,
+                               s.rounds < free_lo).astype(jnp.uint32)
         cost = count_fn(s.active) * b_eff.astype(jnp.uint32)
         n_evals = s.n_evals + fresh * cost
         n_cached = s.n_cached + (1 - fresh) * cost
@@ -286,8 +326,16 @@ def adaptive_search(
     if init_sums is not None:
         # PIC seed: resume from the carried permutation prefix.  σ comes
         # from the carried moments (all arms share the same sample count).
+        # The consumed count is Σ perm_w over the prefix — NOT rounds·B:
+        # stratified sharded layouts scatter weight-0 padding into early
+        # rounds, and an inflated n_used would both tighten the seeded
+        # CIs beyond the δ guarantee and exhaust the budget before the
+        # permutation is actually consumed.  (For the cyclic single-
+        # device tiling this reduces to min(rounds·B, n_ref) exactly.)
         rounds0 = jnp.asarray(init_rounds, jnp.int32)
-        n_used0 = jnp.minimum(rounds0 * B, n_ref).astype(jnp.int32)
+        n_used0 = jnp.sum(
+            perm_w * (jnp.arange(perm_w.shape[0]) < rounds0 * B)
+        ).astype(jnp.int32)
         n0_f = jnp.maximum(n_used0.astype(jnp.float32), 1.0)
         mu0 = init_sums / n0_f
         var0 = jnp.maximum(init_sqsums / n0_f - mu0 * mu0, 0.0)

@@ -27,11 +27,15 @@ is structured so the hot path never leaves the accelerator:
 * Each SWAP iteration is ONE fused device step (medoid-cache refresh +
   carried-moment repair + bandit search + candidate loss); only the
   accept/converge decision reads a scalar back on host.
-* The BanditPAM++ PIC cache is a preallocated, padded ``[n, width]``
-  device buffer threaded through the search carry with stats-side
-  write-through: each fresh distance column is stored by the very round
-  that computes it, so nothing is ever recomputed for the cache and the
-  host never touches a distance column.
+* The BanditPAM++ PIC cache is a bounded-width device ring
+  (``repro.core.pic_cache``, ``cache_width`` columns ≈ a few dozen
+  round-batches by default — O(n·width) memory with width ≪ n) threaded
+  through the search carry with stats-side write-through: each fresh
+  distance column is stored by the very round that computes it, and the
+  host never touches a distance column.  When a fit outgrows the ring,
+  the oldest round's slots are recycled and any later read of a recycled
+  round falls back to fresh recomputation — bit-identical blocks, so
+  medoids/loss are unchanged and only the fresh/cached split moves.
 
 ``fused=False`` keeps the host-orchestrated driver (one dispatch per
 medoid / per swap sub-step, host syncs between) built from the same
@@ -78,9 +82,11 @@ from .adaptive import SearchResult, adaptive_search
 from .distances import get_metric
 from .engine import (_EXACT_CHUNK, _build_g, _ref_chunks, _swap_batch_stats,
                      _swap_terms, FitContext, cache_read_or_write,
-                     exact_build_means, exact_swap_means, get_stats_backend,
-                     medoid_cache, pic_fresh_evals, resolve_stats_backend,
+                     counted_dispatch, exact_build_means, exact_swap_means,
+                     get_stats_backend, medoid_cache, resolve_stats_backend,
                      total_loss)
+from .pic_cache import (PicCache, carry_valid, fresh_positions, make_cache,
+                        resolve_cache_rounds)
 from .report import FitReport
 
 __all__ = ["BanditPAM", "FitResult", "medoid_cache", "total_loss"]
@@ -95,10 +101,11 @@ _ = (SearchResult, _EXACT_CHUNK, _build_g, _ref_chunks, _swap_batch_stats,
 # BanditPAM++ carried-moment repair (virtual arms)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k",))
+@functools.partial(jax.jit, static_argnames=("k", "backend"))
 def _carry_delta(cols: jnp.ndarray, pidx: jnp.ndarray, pw: jnp.ndarray,
                  n_prefix: jnp.ndarray, d1o, d2o, ao, d1n, d2n, an,
-                 sums: jnp.ndarray, sqsums: jnp.ndarray, *, k: int):
+                 sums: jnp.ndarray, sqsums: jnp.ndarray, *, k: int,
+                 backend: str):
     """Re-validate carried SWAP arm statistics after an accepted swap.
 
     The carried Σg / Σg² (over the permutation prefix ``[0, n_prefix)``)
@@ -109,20 +116,28 @@ def _carry_delta(cols: jnp.ndarray, pidx: jnp.ndarray, pw: jnp.ndarray,
     shared base term plus at most its old and new cluster rows (the ≤2
     medoid rows invalidated by the swap); every other contribution is
     permutation-invariant and carried verbatim.  Both passes below read the
-    PIC distance columns, so the whole update costs ZERO fresh distance
+    PIC distance columns through the stats backend's cache-served path —
+    on Pallas that is the ``swap_g_stats_cached`` kernel over the full
+    capped cache width — so the whole update costs ZERO fresh distance
     evaluations.  Detection by exact comparison is safe: unchanged entries
     of ``medoid_cache`` are bit-identical recomputations.
 
+    ``cols`` is the capped PIC ring ``[n, W·B]``; the caller guarantees
+    ``n_prefix ≤ W·B`` (and passes 0 once recycling has invalidated the
+    prefix — see ``pic_cache.carry_valid``), under which ring slots are
+    the identity mapping of permutation positions.
+
     Returns (sums', sqsums', n_changed_positions).
     """
+    be = get_stats_backend(backend)
     width = cols.shape[1]
     in_prefix = (jnp.arange(width) < n_prefix).astype(jnp.float32)
     b1, b2, ba = d1o[pidx], d2o[pidx], ao[pidx]
     c1, c2, ca = d1n[pidx], d2n[pidx], an[pidx]
     changed = ((b1 != c1) | (b2 != c2) | (ba != ca)).astype(jnp.float32)
     w = pw * in_prefix * changed
-    s_old, q_old = _swap_batch_stats(cols, b1, b2, ba, w, k)
-    s_new, q_new = _swap_batch_stats(cols, c1, c2, ca, w, k)
+    s_old, q_old, _ = be.swap_stats_from_d(cols, b1, b2, ba, w, k, None)
+    s_new, q_new, _ = be.swap_stats_from_d(cols, c1, c2, ca, w, k, None)
     return (sums - s_old + s_new, sqsums - q_old + q_new,
             jnp.sum(w).astype(jnp.int32))
 
@@ -131,15 +146,15 @@ def _carry_delta(cols: jnp.ndarray, pidx: jnp.ndarray, pw: jnp.ndarray,
 # BUILD
 # ---------------------------------------------------------------------------
 
-def _build_step(data, dnear, med_mask, key, dwarm, hw, perm, *, backend: str,
-                metric: str, batch_size: int, delta: float, sampling: str,
-                baseline: str, mode: str, free_rounds: int = 0
+def _build_step(data, dnear, med_mask, key, cache, dwarm, perm, *,
+                backend: str, metric: str, batch_size: int, delta: float,
+                sampling: str, baseline: str, mode: str, free_rounds: int = 0
                 ) -> SearchResult:
     """One BUILD medoid selection (one Algorithm 1 call).
 
     ``mode`` is the cache regime (see :class:`FitContext`).  Under
-    ``"pic"`` the ``(dwarm, hw)`` device cache rides the search carry with
-    write-through and comes back in ``SearchResult.aux``.
+    ``"pic"`` the bounded :class:`PicCache` ring rides the search carry
+    with write-through and comes back in ``SearchResult.aux``.
     """
     n = data.shape[0]
     be = get_stats_backend(backend)
@@ -150,13 +165,15 @@ def _build_step(data, dnear, med_mask, key, dwarm, hw, perm, *, backend: str,
 
     if mode == "pic":
         def stats_fn(ref_idx, w, lead, rnd, aux):
-            dxy, aux = cache_read_or_write(be, data, ref_idx, metric=metric,
-                                           batch_size=B, rnd=rnd, aux=aux)
+            dxy, aux = cache_read_or_write(
+                be, data, ref_idx, metric=metric, batch_size=B, rnd=rnd,
+                b_eff=jnp.sum(w).astype(jnp.int32), cache=aux)
             s, q, c = be.build_stats_from_d(dxy, dnear[ref_idx], w, ld(lead))
             return s, q, c, aux
 
-        aux_init = (dwarm, hw)
-        free = hw
+        aux_init = cache
+        free = cache.hw
+        free_lo = jnp.maximum(cache.hw - cache.cols.shape[1] // B, 0)
     elif mode == "warm":
         def stats_fn(ref_idx, w, lead, rnd):
             # paper App 2.2 cache: warm rounds read precomputed distance
@@ -172,6 +189,7 @@ def _build_step(data, dnear, med_mask, key, dwarm, hw, perm, *, backend: str,
 
         aux_init = None
         free = free_rounds
+        free_lo = 0
     else:
         def stats_fn(ref_idx, w, lead, rnd):
             return be.build_stats(data, ref_idx, dnear[ref_idx], w,
@@ -179,6 +197,7 @@ def _build_step(data, dnear, med_mask, key, dwarm, hw, perm, *, backend: str,
 
         aux_init = None
         free = 0
+        free_lo = 0
 
     def exact_fn():
         return exact_build_means(be, data, dnear, metric=metric)
@@ -187,7 +206,8 @@ def _build_step(data, dnear, med_mask, key, dwarm, hw, perm, *, backend: str,
                            n_arms=n, n_ref=n, batch_size=B, delta=delta,
                            active_init=jnp.logical_not(med_mask),
                            sampling=sampling, baseline=baseline, perm=perm,
-                           free_rounds=free, aux_init=aux_init)
+                           free_rounds=free, free_lo=free_lo,
+                           aux_init=aux_init)
 
 
 _build_step_jit = jax.jit(
@@ -200,21 +220,21 @@ _build_step_jit = jax.jit(
                    static_argnames=("backend", "metric", "batch_size",
                                     "delta", "sampling", "baseline", "k",
                                     "mode", "free_rounds"))
-def _build_fused(data, subkeys, dwarm, hw, perm, *, backend: str, metric: str,
-                 batch_size: int, delta: float, sampling: str, baseline: str,
-                 k: int, mode: str, free_rounds: int):
+def _build_fused(data, subkeys, cache, dwarm, perm, *, backend: str,
+                 metric: str, batch_size: int, delta: float, sampling: str,
+                 baseline: str, k: int, mode: str, free_rounds: int):
     """The whole BUILD phase as ONE jit: ``fori_loop`` over the k medoid
-    selections, with d_near / the medoid mask / the device PIC cache as
-    loop carry.  Returns per-step rounds and the fresh/cached ledger
-    entries so the host never syncs mid-phase."""
+    selections, with d_near / the medoid mask / the bounded device PIC
+    cache as loop carry.  Returns per-step rounds and the fresh/cached
+    ledger entries so the host never syncs mid-phase."""
     n = data.shape[0]
     B = batch_size
     dist = get_metric(metric)
     pic = mode == "pic"
 
     def body(i, c):
-        dnear, med_mask, medoids, dw, hwc, rounds_a, evals_a, cached_a = c
-        sr = _build_step(data, dnear, med_mask, subkeys[i], dw, hwc, perm,
+        dnear, med_mask, medoids, cc, rounds_a, evals_a, cached_a = c
+        sr = _build_step(data, dnear, med_mask, subkeys[i], cc, dwarm, perm,
                          backend=backend, metric=metric, batch_size=B,
                          delta=delta, sampling=sampling, baseline=baseline,
                          mode=mode, free_rounds=free_rounds)
@@ -223,24 +243,26 @@ def _build_fused(data, subkeys, dwarm, hw, perm, *, backend: str, metric: str,
         med_mask = med_mask.at[m].set(True)
         dnear = jnp.minimum(dnear, dist(data[m][None, :], data)[0])
         if pic:
-            dw, hw2 = sr.aux
-            # Fresh cost = the columns newly materialised into the PIC
-            # cache (full columns, so later searches get them free);
-            # warm rounds are tallied separately as cached reads.
-            fresh = pic_fresh_evals(n, B, hwc, hw2)
+            # Fresh cost = n per column this search computed
+            # (materialisations serve every later search, recycled-slot
+            # replays are paid again); the position COUNT is stored and
+            # the host multiplies by n (a device-side uint32 product
+            # would wrap at large n).  Warm rounds are tallied
+            # separately as cached reads.
+            cc2 = sr.aux
+            fresh = fresh_positions(cc, cc2)
             cached_a = cached_a.at[i].set(sr.n_evals_cached)
-            hwc = hw2
+            cc = cc2
         else:
             fresh = sr.n_evals
         evals_a = evals_a.at[i].set(fresh)
         rounds_a = rounds_a.at[i].set(sr.rounds)
-        return (dnear, med_mask, medoids, dw, hwc, rounds_a, evals_a,
-                cached_a)
+        return (dnear, med_mask, medoids, cc, rounds_a, evals_a, cached_a)
 
     init = (jnp.full((n,), jnp.inf, jnp.float32),
             jnp.zeros((n,), jnp.bool_),
             jnp.zeros((k,), jnp.int32),
-            dwarm, hw,
+            cache,
             jnp.zeros((k,), jnp.int32),
             jnp.zeros((k,), jnp.uint32),
             jnp.zeros((k,), jnp.uint32))
@@ -251,7 +273,7 @@ def _build_fused(data, subkeys, dwarm, hw, perm, *, backend: str, metric: str,
 # SWAP (FastPAM1 fused form)
 # ---------------------------------------------------------------------------
 
-def _swap_search(data, d1, d2, assign, med_mask, key, dwarm, hw, perm,
+def _swap_search(data, d1, d2, assign, med_mask, key, cache, dwarm, perm,
                  init_sums, init_sqsums, init_rounds, *, backend: str,
                  metric: str, batch_size: int, delta: float, k: int,
                  sampling: str, baseline: str, early_stop: bool, mode: str,
@@ -264,14 +286,16 @@ def _swap_search(data, d1, d2, assign, med_mask, key, dwarm, hw, perm,
 
     if mode == "pic":
         def stats_fn(ref_idx, w, lead, rnd, aux):
-            dxy, aux = cache_read_or_write(be, data, ref_idx, metric=metric,
-                                           batch_size=B, rnd=rnd, aux=aux)
+            dxy, aux = cache_read_or_write(
+                be, data, ref_idx, metric=metric, batch_size=B, rnd=rnd,
+                b_eff=jnp.sum(w).astype(jnp.int32), cache=aux)
             s, q, c = be.swap_stats_from_d(dxy, d1[ref_idx], d2[ref_idx],
                                            assign[ref_idx], w, k, ld(lead))
             return s, q, c, aux
 
-        aux_init = (dwarm, hw)
-        free = hw
+        aux_init = cache
+        free = cache.hw
+        free_lo = jnp.maximum(cache.hw - cache.cols.shape[1] // B, 0)
     elif mode == "warm":
         def stats_fn(ref_idx, w, lead, rnd):
             return jax.lax.cond(
@@ -287,6 +311,7 @@ def _swap_search(data, d1, d2, assign, med_mask, key, dwarm, hw, perm,
 
         aux_init = None
         free = free_rounds
+        free_lo = 0
     else:
         def stats_fn(ref_idx, w, lead, rnd):
             return be.swap_stats(data, ref_idx, d1[ref_idx], d2[ref_idx],
@@ -295,6 +320,7 @@ def _swap_search(data, d1, d2, assign, med_mask, key, dwarm, hw, perm,
 
         aux_init = None
         free = 0
+        free_lo = 0
 
     def exact_fn():
         return exact_swap_means(be, data, d1, d2, assign, k, metric=metric)
@@ -312,9 +338,9 @@ def _swap_search(data, d1, d2, assign, med_mask, key, dwarm, hw, perm,
                            active_init=active0, count_fn=count_fn,
                            sampling=sampling, baseline=baseline,
                            stop_when_positive=early_stop, perm=perm,
-                           free_rounds=free, init_sums=init_sums,
-                           init_sqsums=init_sqsums, init_rounds=init_rounds,
-                           aux_init=aux_init)
+                           free_rounds=free, free_lo=free_lo,
+                           init_sums=init_sums, init_sqsums=init_sqsums,
+                           init_rounds=init_rounds, aux_init=aux_init)
 
 
 _swap_search_jit = jax.jit(
@@ -323,7 +349,7 @@ _swap_search_jit = jax.jit(
                                    "early_stop", "mode", "free_rounds"))
 
 
-def _swap_iter(data, medoids, med_mask, key, dwarm, hw, perm, perm_idx,
+def _swap_iter(data, medoids, med_mask, key, cache, dwarm, perm, perm_idx,
                perm_w, carry, *, backend: str, metric: str, batch_size: int,
                delta: float, k: int, sampling: str, baseline: str,
                early_stop: bool, mode: str, free_rounds: int):
@@ -341,34 +367,47 @@ def _swap_iter(data, medoids, med_mask, key, dwarm, hw, perm, perm_idx,
         # BanditPAM++ PIC: the previous search's per-arm moments stay
         # valid for every arm whose g is unchanged; _carry_delta repairs
         # only the contributions of reference points hit by the accepted
-        # swap, from cached columns (zero fresh evals).
+        # swap, from cached columns (zero fresh evals).  Once the ring
+        # has recycled a round the carried prefix is no longer resident,
+        # so the repair is skipped entirely (lax.cond — no wasted
+        # O(n·W·B) pass) and the search starts cold — exact either way,
+        # only the fresh/cached split moves.
         c_sums, c_sq, c_rounds, d1o, d2o, ao = carry
-        init_sums, init_sqsums, n_changed = _carry_delta(
-            dwarm, perm_idx, perm_w, c_rounds * B, d1o, d2o, ao,
-            d1, d2, assign, c_sums, c_sq, k=k)
-        init_rounds = c_rounds
-    sr = _swap_search(data, d1, d2, assign, med_mask, key, dwarm, hw, perm,
-                      init_sums, init_sqsums, init_rounds, backend=backend,
-                      metric=metric, batch_size=B, delta=delta, k=k,
-                      sampling=sampling, baseline=baseline,
+        valid = carry_valid(cache, B)
+
+        def repair(_):
+            return _carry_delta(cache.cols, perm_idx, perm_w, c_rounds * B,
+                                d1o, d2o, ao, d1, d2, assign, c_sums, c_sq,
+                                k=k, backend=backend)
+
+        def cold(_):
+            return (jnp.zeros_like(c_sums), jnp.zeros_like(c_sq),
+                    jnp.int32(0))
+
+        init_sums, init_sqsums, n_changed = jax.lax.cond(
+            valid, repair, cold, None)
+        init_rounds = jnp.where(valid, c_rounds, 0)
+    sr = _swap_search(data, d1, d2, assign, med_mask, key, cache, dwarm,
+                      perm, init_sums, init_sqsums, init_rounds,
+                      backend=backend, metric=metric, batch_size=B,
+                      delta=delta, k=k, sampling=sampling, baseline=baseline,
                       early_stop=early_stop, mode=mode,
                       free_rounds=free_rounds)
     if mode == "pic":
-        dwarm2, hw2 = sr.aux
-        fresh = pic_fresh_evals(n, B, hw, hw2)
-        cached = sr.n_evals_cached + jnp.uint32(n) * n_changed.astype(
-            jnp.uint32)
+        cache2 = sr.aux
+        fresh = fresh_positions(cache, cache2)
     else:
-        dwarm2, hw2 = dwarm, hw
+        cache2 = cache
         fresh = sr.n_evals
-        cached = sr.n_evals_cached
     m_idx = sr.best // n
     x_idx = sr.best % n
     cand = medoids.at[m_idx].set(x_idx)
     new_loss = total_loss(data, cand, metric=metric)
     new_carry = (sr.sums, sr.sqsums, sr.rounds, d1, d2, assign)
-    return (sr.best, new_loss, cand, new_carry, dwarm2, hw2, fresh, cached,
-            sr.used_exact)
+    # fresh is a POSITION count and n_changed a point count under "pic";
+    # the host driver multiplies both by n (uint32-safe).
+    return (sr.best, new_loss, cand, new_carry, cache2, fresh,
+            sr.n_evals_cached, n_changed, sr.used_exact)
 
 
 _swap_iter_jit = jax.jit(
@@ -394,6 +433,9 @@ class BanditPAM:
     CPU), ``"pallas"``, ``"jnp"``, or any registered backend name.
     ``fused=False`` falls back to the host-orchestrated stepped driver
     (same math, one dispatch per sub-step) — the benchmark baseline.
+    ``cache_width`` caps the ``reuse="pic"`` column ring (in reference
+    columns, rounded down to round-batches; default a few dozen
+    round-batches — see ``repro.core.pic_cache``).
     """
 
     def __init__(self, k: int, metric: str = "l2", batch_size: int = 100,
@@ -401,6 +443,7 @@ class BanditPAM:
                  seed: int = 0, sampling: str = "permutation",
                  baseline: str = "none", swap_early_stop: bool = False,
                  cache_cols: int = 0, reuse: str = "none",
+                 cache_width: Optional[int] = None,
                  backend: str = "auto", fused: bool = True):
         if reuse not in ("none", "pic"):
             raise ValueError(f"unknown reuse mode {reuse!r}")
@@ -418,6 +461,9 @@ class BanditPAM:
         self.swap_early_stop = swap_early_stop
         self.cache_cols = cache_cols
         self.reuse = reuse
+        # Width cap (in reference columns) of the PIC ring; None = auto
+        # (a few dozen round-batches — O(n·width) memory, width ≪ n).
+        self.cache_width = cache_width
         self.backend = backend
         self.fused = bool(fused)
 
@@ -434,25 +480,27 @@ class BanditPAM:
         if self.reuse == "pic":
             perm = jax.random.permutation(ckey, n).astype(jnp.int32)
             n_rounds_max = -(-n // B)
-            width = n_rounds_max * B
+            W = resolve_cache_rounds(n_rounds_max, B, self.cache_width)
+            width = W * B
             perm_np = np.asarray(perm)
-            # Same tiling as adaptive_search: positions >= n are w=0 padding.
+            # Prefix of adaptive_search's tiling at the capped width:
+            # positions >= n are w=0 padding.
             perm_idx = jnp.asarray(np.tile(perm_np, -(-width // n))[:width])
             perm_w = jnp.asarray((np.arange(width) < n).astype(np.float32))
-            dwarm = jnp.zeros((n, width), jnp.float32)
-            hw = jnp.int32(0)
+            cache = make_cache(n, B, W)
             if self.cache_cols > 0:
-                # optional upfront warm block, same semantics as reuse="none"
-                warm = min(self.cache_cols, n) // B
+                # optional upfront warm block, same semantics as
+                # reuse="none" (clamped to the ring capacity)
+                warm = min(min(self.cache_cols, n) // B, W)
                 if warm > 0:
                     cols = be.pairwise(data, data[perm_idx[:warm * B]],
                                        metric=self.metric)
-                    dwarm = dwarm.at[:, :warm * B].set(cols)
-                    hw = jnp.int32(warm)
+                    cache = PicCache(
+                        cache.cols.at[:, :warm * B].set(cols),
+                        jnp.int32(warm), jnp.uint32(warm * B))
                     res.evals_by_phase["cache_warm"] = n * warm * B
             return FitContext(mode="pic", backend=backend, perm=perm,
-                              perm_idx=perm_idx, perm_w=perm_w,
-                              dwarm=dwarm, hw_rounds=hw)
+                              perm_idx=perm_idx, perm_w=perm_w, cache=cache)
         if self.cache_cols > 0 and self.sampling == "permutation":
             # Paper App 2.2: one fixed reference permutation for every
             # search + a warm block of its first C columns, paid once.
@@ -482,38 +530,45 @@ class BanditPAM:
                   sampling=self.sampling, baseline=self.baseline,
                   mode=ctx.mode, free_rounds=ctx.free_rounds)
         if self.fused:
-            (dnear, med_mask, medoids, dwarm, hw, rounds_a, evals_a,
-             cached_a) = _build_fused(data, subkeys, ctx.dwarm,
-                                      ctx.hw_rounds, ctx.perm, k=self.k, **kw)
+            phase = counted_dispatch(_build_fused, res.dispatches_by_phase,
+                                     "build")
+            (dnear, med_mask, medoids, cache, rounds_a, evals_a,
+             cached_a) = phase(data, subkeys, ctx.cache, ctx.dwarm,
+                               ctx.perm, k=self.k, **kw)
+            ctx.cache = cache
         else:
             # Stepped baseline: one dispatch + one host sync per medoid.
+            step = counted_dispatch(_build_step_jit,
+                                    res.dispatches_by_phase, "build")
             dist = get_metric(self.metric)
             dnear = jnp.full((n,), jnp.inf, jnp.float32)
             med_mask = jnp.zeros((n,), jnp.bool_)
-            dwarm, hw = ctx.dwarm, ctx.hw_rounds
+            cache = ctx.cache
             meds, rounds_a, evals_a, cached_a = [], [], [], []
             for i in range(self.k):
-                sr = _build_step_jit(data, dnear, med_mask, subkeys[i],
-                                     dwarm, hw, ctx.perm, **kw)
+                sr = step(data, dnear, med_mask, subkeys[i],
+                          cache, ctx.dwarm, ctx.perm, **kw)
                 m = int(sr.best)
                 meds.append(m)
                 med_mask = med_mask.at[m].set(True)
                 dnear = jnp.minimum(dnear, dist(data[m][None, :], data)[0])
                 if ctx.mode == "pic":
-                    dwarm, hw2 = sr.aux
-                    evals_a.append(int(pic_fresh_evals(
-                        n, self.batch_size, hw, hw2)))
+                    cache2 = sr.aux
+                    evals_a.append(int(fresh_positions(cache, cache2)))
                     cached_a.append(int(sr.n_evals_cached))
-                    hw = hw2
+                    cache = cache2
                 else:
                     evals_a.append(int(sr.n_evals))
                 rounds_a.append(int(sr.rounds))
             medoids = jnp.asarray(meds, jnp.int32)
-        ctx.dwarm, ctx.hw_rounds = dwarm, hw
+            ctx.cache = cache
         res.build_rounds.extend(
             int(r) for r in np.asarray(rounds_a, np.int64))
+        # Under "pic" the per-step entries are fresh POSITION counts; the
+        # n· multiply happens here on host ints (no uint32 wrap).
+        scale = n if ctx.mode == "pic" else 1
         res.evals_by_phase["build"] = (
-            int(np.asarray(evals_a, np.int64).sum()) + n * self.k)
+            scale * int(np.asarray(evals_a, np.int64).sum()) + n * self.k)
         if ctx.mode == "pic":
             res.evals_by_phase["build_cached"] = int(
                 np.asarray(cached_a, np.int64).sum())
@@ -536,16 +591,23 @@ class BanditPAM:
                   sampling=self.sampling, baseline=self.baseline,
                   early_stop=self.swap_early_stop, mode=ctx.mode,
                   free_rounds=ctx.free_rounds)
-        step = _swap_iter_jit if self.fused else self._swap_iter_stepped
+        step = counted_dispatch(
+            _swap_iter_jit if self.fused else self._swap_iter_stepped,
+            res.dispatches_by_phase, "swap")
         for _ in range(self.max_swaps):
             key, sub = jax.random.split(key)
-            (best, new_loss_d, cand, new_carry, dwarm, hw, fresh, cached,
-             used_exact) = step(data, medoids, med_mask, sub, ctx.dwarm,
-                                ctx.hw_rounds, ctx.perm, ctx.perm_idx,
-                                ctx.perm_w, carry, **kw)
-            ctx.dwarm, ctx.hw_rounds = dwarm, hw
-            swap_evals += 2 * n * self.k + int(fresh)
-            swap_cached += int(cached)
+            (best, new_loss_d, cand, new_carry, cache, fresh, cached,
+             n_changed, used_exact) = step(data, medoids, med_mask, sub,
+                                           ctx.cache, ctx.dwarm, ctx.perm,
+                                           ctx.perm_idx, ctx.perm_w, carry,
+                                           **kw)
+            ctx.cache = cache
+            # Under "pic", fresh counts POSITIONS and n_changed counts
+            # repaired points; the n· multiplies run on host ints so the
+            # ledger cannot wrap at large n.
+            scale = n if ctx.mode == "pic" else 1
+            swap_evals += 2 * n * self.k + scale * int(fresh)
+            swap_cached += int(cached) + n * int(n_changed)
             res.swap_exact_fallbacks += int(used_exact)
             if ctx.mode == "pic":
                 carry = new_carry
@@ -565,7 +627,7 @@ class BanditPAM:
             res.evals_by_phase["swap_cached"] = swap_cached
         return medoids, loss, converged
 
-    def _swap_iter_stepped(self, data, medoids, med_mask, key, dwarm, hw,
+    def _swap_iter_stepped(self, data, medoids, med_mask, key, cache, dwarm,
                            perm, perm_idx, perm_w, carry, *, backend, metric,
                            batch_size, delta, k, sampling, baseline,
                            early_stop, mode, free_rounds):
@@ -581,31 +643,37 @@ class BanditPAM:
         n_changed = 0
         if carry is not None:
             c_sums, c_sq, c_rounds, d1o, d2o, ao = carry
-            init_sums, init_sqsums, nc = _carry_delta(
-                dwarm, perm_idx, perm_w, c_rounds * B, d1o, d2o, ao,
-                d1, d2, assign, c_sums, c_sq, k=k)
-            n_changed = int(nc)
-            init_rounds = c_rounds
-        sr = _swap_search_jit(data, d1, d2, assign, med_mask, key, dwarm, hw,
-                              perm, init_sums, init_sqsums, init_rounds,
-                              backend=backend, metric=metric, batch_size=B,
-                              delta=delta, k=k, sampling=sampling,
-                              baseline=baseline, early_stop=early_stop,
-                              mode=mode, free_rounds=free_rounds)
+            if bool(carry_valid(cache, B)):
+                # Host branch of the fused driver's lax.cond: the repair
+                # only runs while the carried prefix is ring-resident.
+                init_sums, init_sqsums, nc = _carry_delta(
+                    cache.cols, perm_idx, perm_w, c_rounds * B,
+                    d1o, d2o, ao, d1, d2, assign, c_sums, c_sq,
+                    k=k, backend=backend)
+                init_rounds = c_rounds
+                n_changed = int(nc)
+            else:
+                init_sums = jnp.zeros_like(c_sums)
+                init_sqsums = jnp.zeros_like(c_sq)
+        sr = _swap_search_jit(data, d1, d2, assign, med_mask, key, cache,
+                              dwarm, perm, init_sums, init_sqsums,
+                              init_rounds, backend=backend, metric=metric,
+                              batch_size=B, delta=delta, k=k,
+                              sampling=sampling, baseline=baseline,
+                              early_stop=early_stop, mode=mode,
+                              free_rounds=free_rounds)
         if mode == "pic":
-            dwarm, hw2 = sr.aux
-            fresh = int(pic_fresh_evals(n, B, hw, hw2))
-            cached = int(sr.n_evals_cached) + n * n_changed
+            cache2 = sr.aux
+            fresh = int(fresh_positions(cache, cache2))
         else:
-            hw2 = hw
+            cache2 = cache
             fresh = int(sr.n_evals)
-            cached = int(sr.n_evals_cached)
         m_idx, x_idx = divmod(int(sr.best), n)
         cand = medoids.at[m_idx].set(x_idx)
         new_loss = total_loss(data, cand, metric=metric)
         new_carry = (sr.sums, sr.sqsums, sr.rounds, d1, d2, assign)
-        return (int(sr.best), new_loss, cand, new_carry, dwarm, hw2, fresh,
-                cached, int(sr.used_exact))
+        return (int(sr.best), new_loss, cand, new_carry, cache2, fresh,
+                int(sr.n_evals_cached), n_changed, int(sr.used_exact))
 
     # -- public ----------------------------------------------------------
     def fit(self, data) -> FitResult:

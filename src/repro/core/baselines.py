@@ -113,7 +113,13 @@ def fasterpam(data, k: int, metric: str = "l2", max_steps: Optional[int] = None,
 
 @functools.partial(jax.jit, static_argnames=("metric", "k"))
 def _voronoi_update(data, medoids, *, metric: str, k: int):
-    """Reassign points, then recompute each cluster's medoid exactly."""
+    """Reassign points, then recompute each cluster's medoid exactly.
+
+    An empty cluster (possible when two medoids coincide or tie for all
+    points — argmin assigns everything to the lower index) keeps its
+    previous medoid: its cost column is all-inf, and electing argmin's
+    arbitrary index 0 there would silently produce duplicate medoids.
+    """
     n = data.shape[0]
     dist = get_metric(metric)
     dmat = dist(data, data[medoids])                    # [n, k]
@@ -126,7 +132,10 @@ def _voronoi_update(data, medoids, *, metric: str, k: int):
     cost = d_all @ onehot                               # [n, k] Σ_{y∈C_c} d(x,y)
     member = onehot > 0
     cost = jnp.where(member, cost, jnp.inf)             # only members eligible
-    new_medoids = jnp.argmin(cost, axis=0).astype(jnp.int32)
+    nonempty = jnp.any(member, axis=0)                  # [k]
+    new_medoids = jnp.where(nonempty,
+                            jnp.argmin(cost, axis=0).astype(jnp.int32),
+                            medoids.astype(jnp.int32))
     return new_medoids, assign
 
 
@@ -169,17 +178,26 @@ def clarans(data, k: int, metric: str = "l2", num_local: int = 2,
         cur = jnp.asarray(medoids)
         cur_loss = float(total_loss(data, cur, metric=metric))
         evals += n * k
+        # Host-side medoid set, maintained across accepted swaps; the
+        # neighbour draw maps a uniform draw over the n-k non-medoids
+        # through the sorted medoid list (order-statistic shift), so no
+        # rejection loop is needed.  (Historically the draw rejected and
+        # redrew whenever it hit a medoid — unbounded for small n-k —
+        # and re-materialised the medoid array on every attempt.)
+        cur_sorted = np.sort(np.asarray(cur))
         j = 0
         while j < max_neighbors:
             m_idx = int(rng.integers(k))
-            x = int(rng.integers(n))
-            if x in np.asarray(cur):
-                continue
+            x = int(rng.integers(n - k))
+            for mval in cur_sorted:
+                if x >= mval:
+                    x += 1
             cand = cur.at[m_idx].set(x)
             cand_loss = float(total_loss(data, cand, metric=metric))
             evals += n * k
             if cand_loss < cur_loss:
                 cur, cur_loss, j = cand, cand_loss, 0
+                cur_sorted = np.sort(np.asarray(cur))
             else:
                 j += 1
         if cur_loss < best_loss:

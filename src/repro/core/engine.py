@@ -52,6 +52,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .distances import get_metric, pairwise
+from .pic_cache import (PicCache, cache_read_or_write, carry_valid,  # noqa: F401
+                        fresh_positions, make_cache,  # noqa: F401
+                        resolve_cache_rounds)  # noqa: F401
 
 _EXACT_CHUNK = 512  # reference-chunk size for exact fallback passes
 
@@ -172,41 +175,21 @@ def _swap_batch_stats(dxy, d1_b, d2_b, a_b, w, k, lead=None):
 
 
 # ---------------------------------------------------------------------------
-# Device-resident PIC cache primitives (shared by the BUILD and SWAP
-# search drivers — the one definition of the write-through and its ledger)
-# ---------------------------------------------------------------------------
-
-def cache_read_or_write(be, data, ref_idx, *, metric: str, batch_size: int,
-                        rnd, aux):
-    """One PIC cache access inside a bandit round: serve round ``rnd``
-    from the device column buffer when already materialised, else compute
-    the block fresh through the backend's pairwise path and write it
-    through.  ``aux`` is the ``(dwarm [n, width], hw_rounds)`` search
-    carry; returns ``(dxy [n, B], aux')`` with the high-water mark
-    advanced past ``rnd``."""
-    dw, hw = aux
-    B = batch_size
-
-    def cached(dw):
-        return jax.lax.dynamic_slice_in_dim(dw, rnd * B, B, 1), dw
-
-    def fresh(dw):
-        dxy = be.pairwise(data, data[ref_idx], metric=metric)
-        return dxy, jax.lax.dynamic_update_slice_in_dim(dw, dxy, rnd * B, 1)
-
-    dxy, dw = jax.lax.cond(rnd < hw, cached, fresh, dw)
-    return dxy, (dw, jnp.maximum(hw, rnd + 1))
-
-
-def pic_fresh_evals(n: int, batch_size: int, hw0, hw1):
-    """Ledger rule for PIC materialisation: fresh cost is ``n`` per newly
-    effective reference position (a full column, which is what makes the
-    position free for every arm of every later search) in rounds
-    ``[hw0, hw1)``; positions past ``n`` are permutation padding and cost
-    nothing.  Returns a uint32 scalar (device or host operands)."""
-    eff0 = jnp.minimum(jnp.asarray(hw0, jnp.int32) * batch_size, n)
-    eff1 = jnp.minimum(jnp.asarray(hw1, jnp.int32) * batch_size, n)
-    return jnp.uint32(n) * (eff1 - eff0).astype(jnp.uint32)
+# Device-resident PIC cache primitives: extracted to
+# ``repro.core.pic_cache`` (bounded width + round recycling) and
+# re-exported from the top of this module for the drivers and historical
+# importers.
+def counted_dispatch(fn, dispatches: Dict[str, int], phase: str):
+    """Wrap a compiled phase callable so every driver-level dispatch is
+    COUNTED at the call site — ``FitReport.dispatches_by_phase`` is a
+    measurement, not a self-reported constant.  A refactor that
+    re-introduces a per-selection host loop shows up in the recorded
+    count (and trips ``benchmarks/distributed_bench.py``'s single-
+    dispatch BUILD assertion) instead of being silently papered over."""
+    def call(*args, **kw):
+        dispatches[phase] = dispatches.get(phase, 0) + 1
+        return fn(*args, **kw)
+    return call
 
 
 # ---------------------------------------------------------------------------
@@ -407,18 +390,19 @@ class FitContext:
     * ``"warm"`` — paper App 2.2: a fixed permutation plus an upfront warm
       block of its first ``free_rounds`` column batches (static; no
       write-through).
-    * ``"pic"``  — BanditPAM++ permutation-invariant cache, device-resident:
-      ``dwarm`` is a preallocated ``[n, n_rounds_max · B]`` buffer whose
-      first ``hw_rounds`` round-blocks are materialised; searches write
-      fresh blocks through from inside the bandit loop, so each column is
-      computed exactly once per fit.
+    * ``"pic"``  — BanditPAM++ permutation-invariant cache, device-resident
+      and width-bounded: ``cache`` is a :class:`~repro.core.pic_cache.PicCache`
+      ring of ``cache_width`` columns with round recycling; searches
+      write fresh blocks through from inside the bandit loop, and rounds
+      whose slot was recycled fall back to fresh recomputation.
     """
 
     mode: str                              # "none" | "warm" | "pic"
     backend: str                           # registered stats-backend name
     perm: Optional[jnp.ndarray] = None     # [n] fixed reference permutation
-    perm_idx: Optional[jnp.ndarray] = None  # [width] tiled permutation
-    perm_w: Optional[jnp.ndarray] = None   # [width] {0,1} padding weights
-    dwarm: Optional[jnp.ndarray] = None    # [n, width] distance columns
-    hw_rounds: Any = 0                     # int32 scalar: materialised rounds
+    perm_idx: Optional[jnp.ndarray] = None  # [W·B] tiled permutation prefix
+    perm_w: Optional[jnp.ndarray] = None   # [W·B] {0,1} padding weights
+    cache: Optional[PicCache] = None       # bounded PIC column ring ("pic");
+    #                                        capacity W = cols.shape[1] // B
+    dwarm: Optional[jnp.ndarray] = None    # [n, C] warm columns ("warm")
     free_rounds: int = 0                   # static warm-block rounds ("warm")

@@ -53,6 +53,13 @@ class FitReport:
     # solvers that time their phases (BanditPAM).  Unlike the ledger this
     # is environment-dependent; benchmarks/core_bench.py medians it.
     wall_by_phase: Dict[str, float] = field(default_factory=dict)
+    # Driver-level compiled phase-step calls, MEASURED at the call site
+    # (``engine.counted_dispatch``, not a self-reported constant): the
+    # fused BUILD registers 1 for the whole phase, the stepped baseline
+    # one per selection; SWAP registers one step per iteration (the
+    # stepped baseline's step internally bundles a few sub-dispatches).
+    # benchmarks/distributed_bench.py asserts the sharded BUILD stays 1.
+    dispatches_by_phase: Dict[str, int] = field(default_factory=dict)
 
     def ledger(self) -> Dict[str, object]:
         """The unified fresh/cached distance-evaluation ledger as one dict

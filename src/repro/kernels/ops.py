@@ -150,6 +150,15 @@ def swap_g_stats(x: jnp.ndarray, y: jnp.ndarray, d1_b: jnp.ndarray,
     return sums[:m, :k].T, sq[:m, :k].T, cross[:m, :k].T
 
 
+# Reference-axis tile budget for the cache-served SWAP kernel: one
+# [128, CACHE_B_MAX] f32 distance tile is 1 MiB of VMEM.  The carried-
+# statistic repair feeds the kernel the WHOLE capped PIC ring width
+# (cache_width columns) as one batch; widths past the budget are split
+# into additive chunks — Σg / Σg² / Σg·g_lead are sums over reference
+# positions, so per-chunk results accumulate exactly.
+CACHE_B_MAX = 2048
+
+
 def swap_g_stats_cached(dxy: jnp.ndarray, d1_b: jnp.ndarray,
                         d2_b: jnp.ndarray, assign_b: jnp.ndarray,
                         w: jnp.ndarray, k: int,
@@ -163,16 +172,35 @@ def swap_g_stats_cached(dxy: jnp.ndarray, d1_b: jnp.ndarray,
     slice of the permutation-invariant column cache — this is the kernel
     behind warm (cached) bandit rounds and the carried-statistic repair of
     ``BanditPAM(reuse="pic")`` on TPU: zero fresh distance work, stats only.
+    ``B`` may be the full capped cache width (``cache_width`` columns);
+    past ``CACHE_B_MAX`` the reference axis is split into additive chunks
+    so the resident tile stays VMEM-bounded.
     """
     if interpret is None:
         interpret = _default_interpret()
-    m = dxy.shape[0]
-    dp = _pad_to(_pad_to(dxy, 1, 128), 0, tm)
-    d1, d2, oh, lg = _swap_prep(d1_b, d2_b, assign_b, w, k, lead_g,
-                                dp.shape[1] - dxy.shape[1])
-    sums, sq, cross = _swap_g.swap_g_from_cache_kernel(dp, d1, d2, oh, lg,
-                                                       tm=tm,
-                                                       interpret=interpret)
+    m, b = dxy.shape
+
+    def one(dxy_c, d1_c, d2_c, a_c, w_c, lg_c):
+        dp = _pad_to(_pad_to(dxy_c, 1, 128), 0, tm)
+        d1, d2, oh, lg = _swap_prep(d1_c, d2_c, a_c, w_c, k, lg_c,
+                                    dp.shape[1] - dxy_c.shape[1])
+        return _swap_g.swap_g_from_cache_kernel(dp, d1, d2, oh, lg, tm=tm,
+                                                interpret=interpret)
+
+    if b <= CACHE_B_MAX:
+        sums, sq, cross = one(dxy, d1_b, d2_b, assign_b, w, lead_g)
+    else:
+        sums = sq = cross = None
+        for lo in range(0, b, CACHE_B_MAX):
+            hi = min(lo + CACHE_B_MAX, b)
+            part = one(dxy[:, lo:hi], d1_b[lo:hi], d2_b[lo:hi],
+                       assign_b[lo:hi], w[lo:hi],
+                       None if lead_g is None else lead_g[lo:hi])
+            if sums is None:
+                sums, sq, cross = part
+            else:
+                sums, sq, cross = (sums + part[0], sq + part[1],
+                                   cross + part[2])
     return sums[:m, :k].T, sq[:m, :k].T, cross[:m, :k].T
 
 

@@ -19,7 +19,11 @@ a [TM, B] x [B, K] systolic matmul.
 ``swap_g_from_cache_kernel`` is the BanditPAM++ PIC variant: the distance
 tile is read from a resident cached column block (warm rounds and
 carried-statistic repairs) instead of being recomputed — the d/base/corr
-pipeline after the distance pass is byte-identical.
+pipeline after the distance pass is byte-identical.  Its ``B`` is the
+caller's block width: one bandit round-batch for warm rounds, or up to
+the capped PIC ring width for the carried-statistic repair
+(``ops.swap_g_stats_cached`` splits widths past its VMEM budget into
+additive chunks).
 """
 
 from __future__ import annotations

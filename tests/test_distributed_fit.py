@@ -93,6 +93,83 @@ else:
             assert len(r.build_rounds) == K
             assert r.converged
 
+    def test_backend_ledgers_compare_exactly(fits):
+        """The leader fp-tie fix (adaptive.LEAD_TIE_REL) makes the
+        sharded jnp and Pallas ledgers identical, not just the answer."""
+        j, p = fits["jnp"], fits["pallas"]
+        assert dict(j.evals_by_phase) == dict(p.evals_by_phase)
+        assert j.build_rounds == p.build_rounds
+
+    def test_build_phase_is_single_dispatch(fits):
+        """The fused sharded BUILD is ONE jit dispatch for the whole
+        phase (fori_loop over the k selections with the shard_map
+        inside), not one per selection."""
+        for r in fits.values():
+            assert r.dispatches_by_phase["build"] == 1
+            assert r.dispatches_by_phase["swap"] == r.n_swaps + 1
+
+    # -- sharded PIC cache (reuse="pic") ---------------------------------
+    @pytest.fixture(scope="module")
+    def pic_fits(data, mesh):
+        return {b: DistributedBanditPAM(K, mesh, metric="l2", seed=SEED,
+                                        backend=b, reuse="pic").fit(data)
+                for b in ("jnp", "pallas")}
+
+    def test_sharded_pic_reports_cached_ledger_split(pic_fits, fits):
+        """Acceptance: DistributedBanditPAM(reuse="pic") reports a
+        non-zero cached count, the fresh/cached split is itemised, and
+        the reuse engine pays measurably fewer fresh evaluations than
+        the cache-less sharded fit."""
+        for r in pic_fits.values():
+            assert r.cached_evals > 0
+            assert {"build", "swap", "build_cached",
+                    "swap_cached"} <= set(r.evals_by_phase)
+            assert r.distance_evals == sum(
+                v for ph, v in r.evals_by_phase.items()
+                if not ph.endswith("_cached"))
+            assert r.cached_evals == sum(
+                v for ph, v in r.evals_by_phase.items()
+                if ph.endswith("_cached"))
+            assert r.distance_evals < fits["jnp"].distance_evals
+            assert r.dispatches_by_phase["build"] == 1
+
+    def test_sharded_pic_matches_single_device_answer(pic_fits, data):
+        """Sharded-vs-single-device parity: different (equally valid)
+        sampling schedules, same exact-PAM answer tier."""
+        from repro.core import BanditPAM
+        single = BanditPAM(K, metric="l2", seed=SEED, reuse="pic").fit(data)
+        for r in pic_fits.values():
+            assert sorted(r.medoids.tolist()) == sorted(
+                single.medoids.tolist())
+            assert r.loss == pytest.approx(single.loss, rel=1e-5)
+
+    def test_sharded_pic_backend_ledgers_compare_exactly(pic_fits):
+        j, p = pic_fits["jnp"], pic_fits["pallas"]
+        assert np.array_equal(np.sort(j.medoids), np.sort(p.medoids))
+        assert dict(j.evals_by_phase) == dict(p.evals_by_phase)
+
+    def test_sharded_pic_tiny_cache_width_recycles_exactly(pic_fits, mesh,
+                                                           data):
+        """A tiny sharded ring forces recycling: medoids/loss unchanged,
+        fresh count rises — the exact-fallback invariant holds across
+        the mesh."""
+        ref = pic_fits["jnp"]
+        est = DistributedBanditPAM(K, mesh, metric="l2", seed=SEED,
+                                   backend="jnp", reuse="pic",
+                                   cache_width=128)   # one round-batch
+        capped = est.fit(data)
+        assert sorted(capped.medoids.tolist()) == sorted(
+            ref.medoids.tolist())
+        assert capped.loss == pytest.approx(ref.loss, rel=1e-6)
+        assert capped.distance_evals >= ref.distance_evals
+
+    def test_sharded_pic_facade_roundtrip(data, mesh):
+        est = KMedoids(K, solver="banditpam_dist", metric="l2", seed=SEED,
+                       backend="jnp", mesh=mesh, reuse="pic",
+                       cache_width=512).fit(np.asarray(data))
+        assert est.report_.cached_evals > 0
+        assert est.labels_.shape == (N,)
+
     def test_uneven_tiny_n_with_empty_shards(mesh):
         # n < n_loc * n_shards leaves whole shards as padding; their
         # stratum weight is 0 and the fit must still match exact PAM.

@@ -38,21 +38,22 @@ def test_backend_parity_full_fit(metric, reuse):
     assert _ledger(a) == _ledger(b)
 
 
-def test_backend_parity_with_leader_baseline():
+@pytest.mark.parametrize("reuse", ["none", "pic"])
+def test_backend_parity_with_leader_baseline(reuse):
+    """The differenced-CI elimination now carries a deterministic
+    tie-break (adaptive.LEAD_TIE_REL margin + the leader excluded from
+    its own test), so ~1e-6 kernel-vs-jnp distance deltas can no longer
+    flip kills that used to sit at exact fp ties — leader-mode ledgers
+    compare EXACTLY across stats backends, like baseline="none" always
+    did."""
     data = datasets.mnist_like(300, seed=3)
-    a = BanditPAM(3, metric="l2", seed=1, baseline="leader",
+    a = BanditPAM(3, metric="l2", seed=1, baseline="leader", reuse=reuse,
                   backend="jnp").fit(data)
-    b = BanditPAM(3, metric="l2", seed=1, baseline="leader",
+    b = BanditPAM(3, metric="l2", seed=1, baseline="leader", reuse=reuse,
                   backend="pallas").fit(data)
     assert a.medoids.tolist() == b.medoids.tolist()
     assert b.loss == pytest.approx(a.loss, rel=1e-6)
-    # Under the differenced-CI rule the leader's own margin is exactly 0,
-    # so a ~1e-6 kernel-vs-jnp distance difference can shift one arm's
-    # elimination by a round; that moves per-round active counts (a few
-    # cached-read tallies) without touching the answer.  Assert the robust
-    # invariants: fresh work within one bandit round, cached within 1%.
-    assert abs(a.distance_evals - b.distance_evals) <= data.shape[0] * 100
-    assert b.cached_evals == pytest.approx(a.cached_evals, rel=0.01)
+    assert _ledger(a) == _ledger(b)   # incl. medoids + itemised phases
 
 
 def test_backend_registry_and_resolution():

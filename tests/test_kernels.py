@@ -141,6 +141,31 @@ def test_swap_g_cached_kernel_matches_fresh(metric, m, b, d, k):
                                    rtol=2e-4, atol=5e-3)
 
 
+def test_swap_g_cached_chunks_capped_cache_width():
+    """The cache-served kernel must accept the full capped PIC ring width
+    as one batch: past ``CACHE_B_MAX`` the reference axis is split into
+    additive chunks whose accumulated stats equal the single-call
+    result (this is the tile the carried-statistic repair feeds it)."""
+    m, d, k = 64, 16, 3
+    b = ops.CACHE_B_MAX + 300          # forces the chunked path
+    rng = np.random.default_rng(9)
+    x, y = _data(m, b, d, seed=9)
+    d1 = jnp.asarray(rng.uniform(0.1, 2.0, size=b).astype(np.float32))
+    d2 = jnp.asarray((np.asarray(d1)
+                      + rng.uniform(0.1, 2.0, size=b)).astype(np.float32))
+    assign = jnp.asarray(rng.integers(0, k, size=b).astype(np.int32))
+    w = jnp.asarray((rng.uniform(size=b) < 0.9).astype(np.float32))
+    gl = jnp.asarray(rng.standard_normal(b).astype(np.float32))
+    dxy = ref.pairwise_ref(x, y, "l2")
+    got = ops.swap_g_stats_cached(dxy, d1, d2, assign, w, k, lead_g=gl,
+                                  interpret=True)
+    want_s, want_q = ref.swap_g_ref(x, y, d1, d2, assign, w, k, "l2")
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want_s),
+                               rtol=2e-4, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want_q),
+                               rtol=2e-4, atol=5e-2)
+
+
 @pytest.mark.parametrize("metric", METRICS)
 def test_kernel_stats_parity_ragged_shapes(metric):
     """Kernel/jnp stats parity when none of n, B, k is a 128 multiple —

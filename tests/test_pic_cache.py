@@ -1,0 +1,179 @@
+"""Bounded-width PIC cache (repro.core.pic_cache): the cache_width knob,
+round recycling (exact fallback, unchanged medoids/loss), ledger
+bit-parity at sufficient width, and the O(n·width) footprint — plus the
+baselines bugfix regressions that ride the same PR (Voronoi
+empty-cluster collapse, CLARANS non-medoid sampling)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BanditPAM, datasets, clarans, voronoi_iteration
+from repro.core.baselines import _voronoi_update
+from repro.core.pic_cache import (DEFAULT_CACHE_ROUNDS, make_cache,
+                                  resolve_cache_rounds)
+
+
+def _ledger(rep):
+    return (rep.medoids.tolist(), rep.distance_evals, rep.cached_evals,
+            dict(rep.evals_by_phase), rep.n_swaps)
+
+
+# ---------------------------------------------------------------------------
+# cache_width knob resolution
+# ---------------------------------------------------------------------------
+
+def test_resolve_cache_rounds():
+    # default: bounded by DEFAULT_CACHE_ROUNDS, never past the round budget
+    assert resolve_cache_rounds(5, 100, None) == 5
+    assert resolve_cache_rounds(1000, 100, None) == DEFAULT_CACHE_ROUNDS
+    # explicit widths round DOWN to whole round-blocks, clamped to budget
+    assert resolve_cache_rounds(20, 100, 250) == 2
+    assert resolve_cache_rounds(20, 100, 100) == 1
+    assert resolve_cache_rounds(3, 100, 10_000) == 3
+    with pytest.raises(ValueError):
+        resolve_cache_rounds(20, 100, 50)   # narrower than one round-batch
+
+
+def test_default_footprint_is_o_n_width_not_o_n_squared():
+    """Acceptance: no [n, n·B] allocation at n = 1e5 — the default width
+    is a fixed number of round-batches, orders of magnitude below n."""
+    n, B = 100_000, 100
+    rounds = resolve_cache_rounds(-(-n // B), B, None)
+    width = rounds * B
+    assert width == DEFAULT_CACHE_ROUNDS * B
+    assert width * 20 < n                       # width << n
+    # and the full historical width would have been n columns
+    assert width < (-(-n // B)) * B
+
+
+def test_make_cache_shape_and_state():
+    c = make_cache(64, 16, 4)
+    assert c.cols.shape == (64, 64)
+    assert int(c.hw) == 0 and int(c.fresh_pos) == 0
+
+
+# ---------------------------------------------------------------------------
+# Recycling semantics on real fits
+# ---------------------------------------------------------------------------
+
+def test_sufficient_width_reproduces_unbounded_ledger_bit_identically():
+    """A cap wide enough to hold every round ever materialised must be
+    indistinguishable from the historical unbounded buffer — medoids,
+    loss, and the itemised fresh/cached ledger all bit-identical."""
+    data = datasets.mnist_like(500, seed=13)
+    full = BanditPAM(5, metric="l2", seed=0, reuse="pic",
+                     cache_width=500).fit(data)      # full round budget
+    dflt = BanditPAM(5, metric="l2", seed=0, reuse="pic").fit(data)
+    assert _ledger(full) == _ledger(dflt)
+    assert full.loss == dflt.loss
+
+
+@pytest.mark.parametrize("cache_width", [100, 200])
+def test_tiny_cap_recycles_exactly(cache_width):
+    """A deliberately tiny ring forces recycling: medoids and loss are
+    unchanged (recycled rounds are recomputed bit-identically), the
+    fresh count rises, cached reads fall — and some reads still hit."""
+    data = datasets.mnist_like(500, seed=13)
+    ref = BanditPAM(5, metric="l2", seed=0, reuse="pic").fit(data)
+    capped = BanditPAM(5, metric="l2", seed=0, reuse="pic",
+                       cache_width=cache_width).fit(data)
+    assert sorted(capped.medoids.tolist()) == sorted(ref.medoids.tolist())
+    assert capped.loss == pytest.approx(ref.loss, rel=1e-6)
+    assert capped.n_swaps == ref.n_swaps
+    assert capped.distance_evals > ref.distance_evals
+    assert capped.cached_evals < ref.cached_evals
+    assert capped.cached_evals > 0
+
+
+def test_tiny_cap_fused_matches_stepped():
+    """The recycling window logic is identical in the fused and stepped
+    drivers (including the carry-drop once hw > W)."""
+    data = datasets.mnist_like(400, seed=3)
+    a = BanditPAM(4, metric="l2", seed=1, reuse="pic", cache_width=100,
+                  fused=True).fit(data)
+    b = BanditPAM(4, metric="l2", seed=1, reuse="pic", cache_width=100,
+                  fused=False).fit(data)
+    assert _ledger(a) == _ledger(b)
+    assert a.loss == pytest.approx(b.loss, rel=1e-6)
+
+
+def test_tiny_cap_backend_parity():
+    data = datasets.mnist_like(300, seed=7)
+    a = BanditPAM(3, metric="l2", seed=0, reuse="pic", cache_width=100,
+                  backend="jnp").fit(data)
+    b = BanditPAM(3, metric="l2", seed=0, reuse="pic", cache_width=100,
+                  backend="pallas").fit(data)
+    assert _ledger(a) == _ledger(b)
+
+
+def test_cache_width_narrower_than_batch_raises():
+    data = datasets.mnist_like(200, seed=0)
+    with pytest.raises(ValueError):
+        BanditPAM(3, metric="l2", reuse="pic", cache_width=50).fit(data)
+
+
+def test_warm_block_clamped_to_ring_capacity():
+    """cache_cols larger than the ring just warms the whole ring."""
+    data = datasets.mnist_like(400, seed=5)
+    r = BanditPAM(3, metric="l2", seed=0, reuse="pic", cache_width=200,
+                  cache_cols=400).fit(data)
+    assert r.evals_by_phase["cache_warm"] == 400 * 200
+    ref = BanditPAM(3, metric="l2", seed=0, reuse="pic",
+                    cache_width=200).fit(data)
+    assert sorted(r.medoids.tolist()) == sorted(ref.medoids.tolist())
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regression: Voronoi empty-cluster collapse
+# ---------------------------------------------------------------------------
+
+def test_voronoi_update_keeps_medoid_of_empty_cluster():
+    """Duplicated medoid points leave one cluster empty (argmin sends
+    every point to the lower index); the update must keep the previous
+    medoid instead of electing argmin-of-all-inf == point 0."""
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(20, 4)).astype(np.float32)
+    data[7] = data[3]                        # exact duplicate pair
+    medoids = jnp.asarray(np.asarray([3, 7], np.int32))
+    new_medoids, assign = _voronoi_update(jnp.asarray(data), medoids,
+                                          metric="l2", k=2)
+    new = np.asarray(new_medoids)
+    assert not np.any(np.asarray(assign) == 1)     # cluster 1 is empty
+    assert new[1] == 7                             # kept, not point 0
+    assert len(set(new.tolist())) == 2             # no duplicate medoids
+
+
+def test_voronoi_iteration_never_duplicates_medoids_on_duplicate_data():
+    rng = np.random.default_rng(3)
+    base = rng.normal(size=(12, 3)).astype(np.float32)
+    data = np.concatenate([base, base], axis=0)    # every point duplicated
+    for seed in range(6):
+        r = voronoi_iteration(data, k=4, metric="l2", seed=seed)
+        assert len(set(r.medoids.tolist())) == 4
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regression: CLARANS bounded non-medoid sampling
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k", [(5, 3), (4, 3), (6, 5)])
+def test_clarans_terminates_with_tiny_non_medoid_pool(n, k):
+    """n - k <= 2 historically re-drew (x in medoids -> continue) with
+    probability ~k/n per attempt and no bound; sampling directly from
+    the non-medoid pool terminates in exactly max_neighbors rejected
+    draws."""
+    rng = np.random.default_rng(1)
+    data = rng.normal(size=(n, 3)).astype(np.float32)
+    r = clarans(data, k=k, metric="l2", seed=0, num_local=2,
+                max_neighbors=25)
+    assert len(set(r.medoids.tolist())) == k
+    # every candidate draw was a valid non-medoid: the eval ledger is
+    # exactly (initial loss + accepted/rejected candidate losses) * n*k
+    assert r.distance_evals % (n * k) == 0
+
+
+def test_clarans_quality_unchanged():
+    data = datasets.mnist_like(200, seed=11)
+    r = clarans(data, k=3, metric="l2", seed=0, max_neighbors=80)
+    v = voronoi_iteration(data, k=3, metric="l2", seed=0)
+    assert r.loss <= v.loss * 1.25          # same quality tier as before
