@@ -7,10 +7,11 @@ JSON: the facade solver sweep to PATH (default ``BENCH_solvers.json``,
 loss + the fresh/cached distance-evaluation ledger per registered solver
 at fixed (n, k)), the core-engine wall-clock sweep (per-solver ×
 stats-backend × fused/stepped driver, median of >= 3 reps) to
-``BENCH_core.json`` next to it, and the sharded-engine sweep
+``BENCH_core.json`` next to it, the sharded-engine sweep
 (``banditpam_dist`` on simulated devices vs the single-device solver) to
-``BENCH_distributed.json``.  ``--solver`` (repeatable) restricts the
-solver sweep to named solvers."""
+``BENCH_distributed.json``, and the batched multi-fit throughput sweep
+(``fit_batch`` vs the Python loop at B=64) to ``BENCH_multifit.json``.
+``--solver`` (repeatable) restricts the solver sweep to named solvers."""
 from __future__ import annotations
 
 import argparse
@@ -23,8 +24,8 @@ def main(argv=None) -> None:
     from repro.api import available_solvers
 
     from . import (core_bench, distributed_bench, kernels_bench,
-                   loss_quality, roofline, scaling_n, sigma_adaptivity,
-                   solvers, violation_pca)
+                   loss_quality, multifit_bench, roofline, scaling_n,
+                   sigma_adaptivity, solvers, violation_pca)
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", nargs="?", const="BENCH_solvers.json",
@@ -42,11 +43,13 @@ def main(argv=None) -> None:
         core_bench.write_json(os.path.join(outdir, "BENCH_core.json"))
         distributed_bench.write_json(
             os.path.join(outdir, "BENCH_distributed.json"))
+        multifit_bench.write_json(
+            os.path.join(outdir, "BENCH_multifit.json"))
         return
     failed = []
     for mod in (loss_quality, scaling_n, sigma_adaptivity, violation_pca,
-                solvers, core_bench, distributed_bench, kernels_bench,
-                roofline):
+                solvers, core_bench, distributed_bench, multifit_bench,
+                kernels_bench, roofline):
         try:
             if mod is solvers:
                 mod.sweep(solvers=args.solver)

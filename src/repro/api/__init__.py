@@ -7,16 +7,19 @@ from repro.core.distances import (attach_index, available_metrics,
                                   register_metric, resolve_metric)
 from repro.core.engine import (available_stats_backends, get_stats_backend,
                                register_stats_backend, resolve_stats_backend)
-from repro.core.report import FitReport
+from repro.core.report import BatchFitReport, FitReport
 
 from .estimator import KMedoids
 from .predict import PALLAS_METRICS, medoid_distances, resolve_backend
-from .registry import (available_solvers, default_params, get_solver,
+from .registry import (available_batch_solvers, available_solvers,
+                       default_params, get_batch_solver, get_solver,
                        register_solver, solver_accepts_backend)
 
 __all__ = [
-    "KMedoids", "FitReport", "register_solver", "get_solver",
-    "available_solvers", "default_params", "solver_accepts_backend",
+    "KMedoids", "FitReport", "BatchFitReport", "register_solver",
+    "get_solver", "get_batch_solver",
+    "available_solvers", "available_batch_solvers",
+    "default_params", "solver_accepts_backend",
     "register_metric", "available_metrics",
     "resolve_metric", "attach_index", "medoid_distances", "resolve_backend",
     "PALLAS_METRICS",

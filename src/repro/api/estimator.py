@@ -29,8 +29,10 @@ sklearn convention and returns labels only.
 
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -38,7 +40,34 @@ from repro.core.banditpam import medoid_cache
 from repro.core.distances import attach_index, resolve_metric
 
 from .predict import DEFAULT_CHUNK, medoid_distances
-from .registry import get_solver, solver_accepts_backend
+from .registry import (get_batch_solver, get_solver,
+                       solver_accepts_backend)
+
+
+def _pad_batch(X_batch) -> jnp.ndarray:
+    """Stack a (possibly ragged) list of [n_i, d] arrays into one padded
+    [B, n_max, d] device array (zero pad rows)."""
+    if not isinstance(X_batch, (list, tuple)):
+        return jnp.asarray(np.asarray(X_batch, np.float32))
+    arrs = [np.asarray(x, np.float32) for x in X_batch]
+    n_max = max(x.shape[0] for x in arrs)
+    out = np.zeros((len(arrs), n_max, arrs[0].shape[1]), np.float32)
+    for i, x in enumerate(arrs):
+        out[i, : x.shape[0]] = x
+    return jnp.asarray(out)
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _batch_labels(data, medoids, *, metric: str):
+    """In-sample assignments for a batch of fits: ONE dispatch, lax.map
+    over the padded [B, n_max, d] lanes — the same per-lane math as the
+    single-fit facade's ``medoid_cache`` call (pad rows get arbitrary
+    labels; callers mask with ``n_valid``)."""
+    def lane(xs):
+        _, _, assign = medoid_cache(xs[0], xs[1], metric=metric)
+        return assign
+
+    return jax.lax.map(lane, (data, medoids))
 
 
 class KMedoids:
@@ -135,6 +164,44 @@ class KMedoids:
             self._medoid_points = jnp.asarray(X[medoids])
             self.n_features_in_ = X.shape[1]
         return self
+
+    def fit_batch(self, X_batch, seeds=None):
+        """Fit a batch of INDEPENDENT datasets in one dispatch per phase.
+
+        ``X_batch`` is a ``[B, n, d]`` array or a list of ``[n_i, d]``
+        arrays (ragged n is padded and masked internally); ``seeds`` an
+        optional length-B list of per-fit RNG seeds (default: every fit
+        uses ``self.seed``).  Only batch-capable solvers are eligible
+        (``banditpam`` / ``banditpam_pp`` — see ``register_solver``'s
+        ``batch_fn``); each fit in the batch reproduces the single-fit
+        ``fit`` bit-identically for the same seed (medoids, loss,
+        fresh/cached ledger).
+
+        Returns a :class:`repro.core.report.BatchFitReport` with per-fit
+        ``FitReport``s, stacked medoids/loss/labels, and the measured
+        batch-level ``dispatches_by_phase`` (one jit per phase).  Does
+        NOT set the single-fit fitted state (``medoids_`` etc.) — a
+        batch has no single in-sample assignment for ``predict``.
+        """
+        batch_fn = get_batch_solver(self.solver)   # fail fast on bad names
+        metric_name = resolve_metric(self.metric)
+        if metric_name == "precomputed":
+            raise ValueError("fit_batch does not support "
+                             "metric='precomputed' (per-fit dissimilarity "
+                             "matrices would be ragged); pass features")
+        params = dict(self.solver_params)
+        if solver_accepts_backend(self.solver):
+            params.setdefault("backend", self.backend)
+        report = batch_fn(X_batch, self.k, metric=metric_name,
+                          seed=self.seed, seeds=seeds, **params)
+        # Stacked in-sample labels: one jit, lax.map over the padded
+        # lanes (pad rows get arbitrary labels; mask with n_valid).
+        report.labels = np.asarray(_batch_labels(
+            _pad_batch(X_batch), jnp.asarray(report.medoids, jnp.int32),
+            metric=metric_name))
+        report.solver = self.solver
+        report.metric = metric_name
+        return report
 
     def _check_fitted(self):
         if self.report_ is None:

@@ -38,16 +38,34 @@ from repro.core.report import FitReport
 Solver = Callable[..., FitReport]
 
 _SOLVERS: Dict[str, Solver] = {}
+_BATCH_SOLVERS: Dict[str, Callable] = {}
 _ACCEPTS_BACKEND: set = set()
 
 
 def register_solver(name: str, fn: Solver, *,
-                    accepts_backend: bool = False) -> None:
+                    accepts_backend: bool = False,
+                    batch_fn: Callable = None) -> None:
     """Register ``fn`` under ``name``.  ``accepts_backend=True`` declares
     that the solver takes the ``backend=`` stats-backend kwarg
     (``repro.core.engine``) — the facade only forwards ``KMedoids(backend=…)``
-    to solvers that opted in."""
+    to solvers that opted in.
+
+    ``batch_fn`` (optional) is the solver's batched multi-fit entrypoint
+    backing ``KMedoids.fit_batch``, with the contract::
+
+        batch_fn(datasets, k, *, metric, seed, seeds=None, **params)
+            -> BatchFitReport
+
+    ``datasets`` is a ``[B, n, d]`` array or list of ragged ``[n_i, d]``
+    arrays; each fit in the returned batch must reproduce ``fn`` on the
+    same dataset/seed bit-identically (medoids, loss, ledger) — the
+    invariant ``tests/test_multifit.py`` enforces for the bandit solvers.
+    """
     _SOLVERS[name] = fn
+    if batch_fn is not None:
+        _BATCH_SOLVERS[name] = batch_fn
+    else:
+        _BATCH_SOLVERS.pop(name, None)
     if accepts_backend:
         _ACCEPTS_BACKEND.add(name)
     else:
@@ -60,8 +78,22 @@ def get_solver(name: str) -> Solver:
     return _SOLVERS[name]
 
 
+def get_batch_solver(name: str) -> Callable:
+    get_solver(name)                       # unknown-name error first
+    if name not in _BATCH_SOLVERS:
+        raise ValueError(
+            f"solver {name!r} has no batched entrypoint; fit_batch is "
+            f"available for {sorted(_BATCH_SOLVERS)} (register one via "
+            f"register_solver(..., batch_fn=...))")
+    return _BATCH_SOLVERS[name]
+
+
 def available_solvers():
     return sorted(_SOLVERS)
+
+
+def available_batch_solvers():
+    return sorted(_BATCH_SOLVERS)
 
 
 def solver_accepts_backend(name: str) -> bool:
@@ -91,11 +123,22 @@ def _banditpam(data, k, *, metric, seed, **params):
     return BanditPAM(k, metric=metric, seed=seed, **params).fit(data)
 
 
+def _banditpam_batch(datasets, k, *, metric, seed, seeds=None, **params):
+    return BanditPAM(k, metric=metric, seed=seed,
+                     **params).fit_batch(datasets, seeds=seeds)
+
+
 def _banditpam_pp(data, k, *, metric, seed, **params):
     # BanditPAM++ = the SWAP-phase reuse engine (virtual arms over the
     # permutation-invariant distance cache).
     params.setdefault("reuse", "pic")
     return BanditPAM(k, metric=metric, seed=seed, **params).fit(data)
+
+
+def _banditpam_pp_batch(datasets, k, *, metric, seed, seeds=None, **params):
+    params.setdefault("reuse", "pic")
+    return BanditPAM(k, metric=metric, seed=seed,
+                     **params).fit_batch(datasets, seeds=seeds)
 
 
 def _banditpam_dist(data, k, *, metric, seed, **params):
@@ -136,8 +179,10 @@ def _voronoi(data, k, *, metric, seed, **params):
     return voronoi_iteration(data, k, metric=metric, seed=seed, **params)
 
 
-register_solver("banditpam", _banditpam, accepts_backend=True)
-register_solver("banditpam_pp", _banditpam_pp, accepts_backend=True)
+register_solver("banditpam", _banditpam, accepts_backend=True,
+                batch_fn=_banditpam_batch)
+register_solver("banditpam_pp", _banditpam_pp, accepts_backend=True,
+                batch_fn=_banditpam_pp_batch)
 register_solver("banditpam_dist", _banditpam_dist, accepts_backend=True)
 register_solver("pam", _pam)
 register_solver("fastpam1", _fastpam1)

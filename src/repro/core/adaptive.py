@@ -140,6 +140,8 @@ def adaptive_search(
     init_sqsums: Optional[jnp.ndarray] = None,
     init_rounds=0,
     aux_init: Any = None,
+    n_ref_eff=None,
+    log_term=None,
 ) -> SearchResult:
     """Run one best-arm identification (one BUILD assignment or one SWAP pick).
 
@@ -192,6 +194,20 @@ def adaptive_search(
       count_fn: distance evaluations *per reference point* as a function of
         the survivor mask (BUILD: #active arms; SWAP: #distinct active
         non-medoids, since FastPAM1 shares distances across the k medoids).
+      n_ref_eff: optional TRACED effective reference count ≤ ``n_ref``.
+        ``n_ref`` keeps sizing every shape (perm tiling, arm arrays) while
+        ``n_ref_eff`` drives every *value* use — the budget condition, the
+        finite-population CI factor, and the exact-fallback accounting.
+        This is what lets one compiled search serve a batch of padded
+        fits with ragged per-fit n (``repro.core.banditpam.fit_batch``):
+        shapes are padded to the batch maximum, the per-fit logical n
+        rides in as data.  Defaults to ``n_ref`` (the historical static
+        behavior, bit-identical).
+      log_term: optional traced ``log(1/δ)`` override.  ``delta`` is a
+        static trace constant; a batch of fits with ragged n has per-fit
+        δ = 1/(1000·n_i), so the batched driver passes the log-term as
+        data instead.  Mutually redundant with ``delta`` — when given,
+        ``delta`` is ignored.
     """
     if sampling not in ("permutation", "replacement"):
         raise ValueError(f"unknown sampling mode {sampling!r}")
@@ -207,7 +223,11 @@ def adaptive_search(
         delta = 1.0 / (1000.0 * n_arms)
     if count_fn is None:
         count_fn = _default_count
-    log_term = jnp.float32(jnp.log(1.0 / delta))
+    if log_term is None:
+        log_term = jnp.float32(jnp.log(1.0 / delta))
+    else:
+        log_term = jnp.asarray(log_term, jnp.float32)
+    n_eff = n_ref if n_ref_eff is None else n_ref_eff
     B = int(batch_size)
     use_perm = sampling == "permutation"
     use_lead = baseline == "leader"
@@ -225,7 +245,7 @@ def adaptive_search(
         perm_w = (jnp.arange(total) < n_ref).astype(jnp.float32)
 
     def cond(s: _State) -> jnp.ndarray:
-        go = jnp.logical_and(s.n_used < n_ref,
+        go = jnp.logical_and(s.n_used < n_eff,
                              jnp.sum(s.active.astype(jnp.int32)) > 1)
         if stop_when_positive:
             # SWAP-convergence shortcut (beyond-paper, EXPERIMENTS §Perf):
@@ -270,7 +290,7 @@ def adaptive_search(
         batch_var = jnp.maximum(sq_b / b_eff_f - batch_mean * batch_mean, 0.0)
         sigma = jnp.where(s.n_used == 0,                      # Eq. 11
                           jnp.sqrt(batch_var) + SIGMA_FLOOR, s.sigma)
-        fpc = (jnp.sqrt(jnp.maximum(1.0 - n_new_f / n_ref, 0.0))
+        fpc = (jnp.sqrt(jnp.maximum(1.0 - n_new_f / n_eff, 0.0))
                if use_perm else jnp.float32(1.0))
         ci = sigma * jnp.sqrt(log_term / n_new_f) * fpc
         ucb = jnp.where(s.active, mu_hat + ci, jnp.inf)
@@ -363,7 +383,7 @@ def adaptive_search(
         mu_exact = exact_fn()
         mu_sel = jnp.where(final.active, mu_exact, jnp.inf)
         best = jnp.argmin(mu_sel).astype(jnp.int32)
-        extra = count_fn(final.active) * jnp.uint32(n_ref)
+        extra = count_fn(final.active) * jnp.asarray(n_eff).astype(jnp.uint32)
         return best, mu_sel[best], final.n_evals + extra, jnp.bool_(True)
 
     def sampled_branch(_):

@@ -71,8 +71,7 @@ from __future__ import annotations
 
 import functools
 import time
-import warnings
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -86,10 +85,11 @@ from .engine import (_EXACT_CHUNK, _build_g, _ref_chunks, _swap_batch_stats,
                      get_stats_backend, medoid_cache, resolve_stats_backend,
                      total_loss)
 from .pic_cache import (PicCache, carry_valid, fresh_positions, make_cache,
-                        resolve_cache_rounds)
-from .report import FitReport
+                        resolve_batch_cache_rounds, resolve_cache_rounds)
+from .report import BatchFitReport, FitReport
 
-__all__ = ["BanditPAM", "FitResult", "medoid_cache", "total_loss"]
+__all__ = ["BanditPAM", "BatchFitReport", "FitResult", "medoid_cache",
+           "total_loss"]
 
 # Re-exported for the siblings (pam, distributed) and external callers that
 # historically imported the shared math from here; it now lives in engine.
@@ -146,7 +146,9 @@ def _carry_delta(cols: jnp.ndarray, pidx: jnp.ndarray, pw: jnp.ndarray,
 # BUILD
 # ---------------------------------------------------------------------------
 
-def _build_step(data, dnear, med_mask, key, cache, dwarm, perm, *,
+def _build_step(data, dnear, med_mask, key, cache, dwarm, perm,
+                perm_idx=None, perm_w=None, valid=None, n_valid=None,
+                log_term=None, *,
                 backend: str, metric: str, batch_size: int, delta: float,
                 sampling: str, baseline: str, mode: str, free_rounds: int = 0
                 ) -> SearchResult:
@@ -155,6 +157,15 @@ def _build_step(data, dnear, med_mask, key, cache, dwarm, perm, *,
     ``mode`` is the cache regime (see :class:`FitContext`).  Under
     ``"pic"`` the bounded :class:`PicCache` ring rides the search carry
     with write-through and comes back in ``SearchResult.aux``.
+
+    The trailing optional args are the batched multi-fit lane state
+    (``fit_batch``): an explicit pre-tiled reference layout
+    (``perm_idx``/``perm_w`` — what the single-fit search would derive
+    from ``key``/``perm`` at trace time, passed as data because the
+    logical n is ragged), the row-validity mask (pad rows may never
+    become medoids), and the traced per-fit budget/δ
+    (``n_valid``/``log_term``).  All default to None → the historical
+    single-fit trace, bit-identically.
     """
     n = data.shape[0]
     be = get_stats_backend(backend)
@@ -202,12 +213,17 @@ def _build_step(data, dnear, med_mask, key, cache, dwarm, perm, *,
     def exact_fn():
         return exact_build_means(be, data, dnear, metric=metric)
 
+    active0 = jnp.logical_not(med_mask)
+    if valid is not None:
+        active0 = jnp.logical_and(active0, valid)
     return adaptive_search(key, stats_fn=stats_fn, exact_fn=exact_fn,
                            n_arms=n, n_ref=n, batch_size=B, delta=delta,
-                           active_init=jnp.logical_not(med_mask),
+                           active_init=active0,
                            sampling=sampling, baseline=baseline, perm=perm,
+                           perm_idx=perm_idx, perm_w=perm_w,
                            free_rounds=free, free_lo=free_lo,
-                           aux_init=aux_init)
+                           aux_init=aux_init, n_ref_eff=n_valid,
+                           log_term=log_term)
 
 
 _build_step_jit = jax.jit(
@@ -220,13 +236,19 @@ _build_step_jit = jax.jit(
                    static_argnames=("backend", "metric", "batch_size",
                                     "delta", "sampling", "baseline", "k",
                                     "mode", "free_rounds"))
-def _build_fused(data, subkeys, cache, dwarm, perm, *, backend: str,
+def _build_fused(data, subkeys, cache, dwarm, perm, spidx=None, spw=None,
+                 valid=None, n_valid=None, log_term=None, *, backend: str,
                  metric: str, batch_size: int, delta: float, sampling: str,
                  baseline: str, k: int, mode: str, free_rounds: int):
     """The whole BUILD phase as ONE jit: ``fori_loop`` over the k medoid
     selections, with d_near / the medoid mask / the bounded device PIC
     cache as loop carry.  Returns per-step rounds and the fresh/cached
-    ledger entries so the host never syncs mid-phase."""
+    ledger entries so the host never syncs mid-phase.
+
+    ``spidx``/``spw`` (batched multi-fit lanes): explicit pre-tiled
+    reference layouts — ``[k, R·B]`` for per-selection permutations
+    (``reuse="none"``, one per search key) or ``[R·B]`` for the one fixed
+    PIC permutation shared by every search."""
     n = data.shape[0]
     B = batch_size
     dist = get_metric(metric)
@@ -234,7 +256,12 @@ def _build_fused(data, subkeys, cache, dwarm, perm, *, backend: str,
 
     def body(i, c):
         dnear, med_mask, medoids, cc, rounds_a, evals_a, cached_a = c
+        if spidx is None:
+            spidx_i = None
+        else:
+            spidx_i = spidx if spidx.ndim == 1 else spidx[i]
         sr = _build_step(data, dnear, med_mask, subkeys[i], cc, dwarm, perm,
+                         spidx_i, spw, valid, n_valid, log_term,
                          backend=backend, metric=metric, batch_size=B,
                          delta=delta, sampling=sampling, baseline=baseline,
                          mode=mode, free_rounds=free_rounds)
@@ -274,11 +301,16 @@ def _build_fused(data, subkeys, cache, dwarm, perm, *, backend: str,
 # ---------------------------------------------------------------------------
 
 def _swap_search(data, d1, d2, assign, med_mask, key, cache, dwarm, perm,
-                 init_sums, init_sqsums, init_rounds, *, backend: str,
+                 init_sums, init_sqsums, init_rounds, s_pidx=None, s_pw=None,
+                 valid=None, n_valid=None, log_term=None, *, backend: str,
                  metric: str, batch_size: int, delta: float, k: int,
                  sampling: str, baseline: str, early_stop: bool, mode: str,
                  free_rounds: int = 0) -> SearchResult:
-    """One SWAP best-arm search over the (medoid, candidate) arm set."""
+    """One SWAP best-arm search over the (medoid, candidate) arm set.
+
+    The trailing optional args are the batched multi-fit lane state (see
+    ``_build_step``); ``s_pidx``/``s_pw`` is this search's pre-tiled
+    reference layout."""
     n = data.shape[0]
     be = get_stats_backend(backend)
     B = batch_size
@@ -325,8 +357,12 @@ def _swap_search(data, d1, d2, assign, med_mask, key, cache, dwarm, perm,
     def exact_fn():
         return exact_swap_means(be, data, d1, d2, assign, k, metric=metric)
 
-    # Candidates that are already medoids are not valid swap targets.
-    active0 = jnp.tile(jnp.logical_not(med_mask)[None, :], (k, 1)).reshape(-1)
+    # Candidates that are already medoids (or pad rows of a batched
+    # ragged fit) are not valid swap targets.
+    cand_ok = jnp.logical_not(med_mask)
+    if valid is not None:
+        cand_ok = jnp.logical_and(cand_ok, valid)
+    active0 = jnp.tile(cand_ok[None, :], (k, 1)).reshape(-1)
 
     def count_fn(active):
         # FastPAM1: one distance per (x, y) pair serves all k arms (·, x).
@@ -338,9 +374,11 @@ def _swap_search(data, d1, d2, assign, med_mask, key, cache, dwarm, perm,
                            active_init=active0, count_fn=count_fn,
                            sampling=sampling, baseline=baseline,
                            stop_when_positive=early_stop, perm=perm,
+                           perm_idx=s_pidx, perm_w=s_pw,
                            free_rounds=free, free_lo=free_lo,
                            init_sums=init_sums, init_sqsums=init_sqsums,
-                           init_rounds=init_rounds, aux_init=aux_init)
+                           init_rounds=init_rounds, aux_init=aux_init,
+                           n_ref_eff=n_valid, log_term=log_term)
 
 
 _swap_search_jit = jax.jit(
@@ -350,13 +388,21 @@ _swap_search_jit = jax.jit(
 
 
 def _swap_iter(data, medoids, med_mask, key, cache, dwarm, perm, perm_idx,
-               perm_w, carry, *, backend: str, metric: str, batch_size: int,
-               delta: float, k: int, sampling: str, baseline: str,
-               early_stop: bool, mode: str, free_rounds: int):
+               perm_w, carry, prev_loss, s_pidx=None, s_pw=None, valid=None,
+               n_valid=None, log_term=None, *, backend: str, metric: str,
+               batch_size: int, delta: float, k: int, sampling: str,
+               baseline: str, early_stop: bool, mode: str, free_rounds: int):
     """One SWAP iteration as a single fused device step: medoid-cache
     refresh + carried-moment repair (``_carry_delta``) + bandit search +
-    candidate loss.  Only the accept/converge decision (one scalar read)
-    is left to the host."""
+    candidate loss + the accept decision against ``prev_loss``.  Only the
+    accept/converge flag (one scalar read) is left to the host.
+
+    The accept comparison runs ON DEVICE in f32 (it used to be a host
+    f64 compare): the batched multi-fit driver must decide inside its
+    per-lane ``while_loop``, and keeping one definition for both paths
+    is what makes ``fit_batch`` ≡ loop-of-``fit`` hold bit-for-bit at
+    accept margins.  The trailing optional args are the batched lane
+    state (see ``_build_step``)."""
     n = data.shape[0]
     B = batch_size
     d1, d2, assign = medoid_cache(data, medoids, metric=metric)
@@ -373,7 +419,7 @@ def _swap_iter(data, medoids, med_mask, key, cache, dwarm, perm, perm_idx,
         # O(n·W·B) pass) and the search starts cold — exact either way,
         # only the fresh/cached split moves.
         c_sums, c_sq, c_rounds, d1o, d2o, ao = carry
-        valid = carry_valid(cache, B)
+        resident = carry_valid(cache, B)
 
         def repair(_):
             return _carry_delta(cache.cols, perm_idx, perm_w, c_rounds * B,
@@ -385,10 +431,11 @@ def _swap_iter(data, medoids, med_mask, key, cache, dwarm, perm, perm_idx,
                     jnp.int32(0))
 
         init_sums, init_sqsums, n_changed = jax.lax.cond(
-            valid, repair, cold, None)
-        init_rounds = jnp.where(valid, c_rounds, 0)
+            resident, repair, cold, None)
+        init_rounds = jnp.where(resident, c_rounds, 0)
     sr = _swap_search(data, d1, d2, assign, med_mask, key, cache, dwarm,
                       perm, init_sums, init_sqsums, init_rounds,
+                      s_pidx, s_pw, valid, n_valid, log_term,
                       backend=backend, metric=metric, batch_size=B,
                       delta=delta, k=k, sampling=sampling, baseline=baseline,
                       early_stop=early_stop, mode=mode,
@@ -402,18 +449,184 @@ def _swap_iter(data, medoids, med_mask, key, cache, dwarm, perm, perm_idx,
     m_idx = sr.best // n
     x_idx = sr.best % n
     cand = medoids.at[m_idx].set(x_idx)
-    new_loss = total_loss(data, cand, metric=metric)
+    new_loss = total_loss(data, cand, metric=metric, w=valid)
+    # The one accept rule (f32, on device) shared by the single-fit
+    # driver and every fit_batch lane.
+    accept = new_loss < prev_loss - 1e-7 * jnp.maximum(1.0,
+                                                       jnp.abs(prev_loss))
     new_carry = (sr.sums, sr.sqsums, sr.rounds, d1, d2, assign)
     # fresh is a POSITION count and n_changed a point count under "pic";
     # the host driver multiplies both by n (uint32-safe).
     return (sr.best, new_loss, cand, new_carry, cache2, fresh,
-            sr.n_evals_cached, n_changed, sr.used_exact)
+            sr.n_evals_cached, n_changed, sr.used_exact, accept)
 
 
 _swap_iter_jit = jax.jit(
     _swap_iter, static_argnames=("backend", "metric", "batch_size", "delta",
                                  "k", "sampling", "baseline", "early_stop",
                                  "mode", "free_rounds"))
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-fit phase drivers (fit_batch)
+# ---------------------------------------------------------------------------
+#
+# One jit per phase over a [batch] axis of independent padded fits.  The
+# batch axis is lowered with ``lax.map`` (a scan over lanes), NOT vmap:
+# vmap rewrites the per-lane GEMMs into batched contractions whose f32
+# accumulation order differs from the single-fit trace (~1e-3 drift in
+# d_near on CPU), which breaks the bit-parity invariant the differential
+# harness pins.  Under lax.map every lane executes the same per-fit HLO
+# as the single-fit jit, so medoids, losses, AND the fresh/cached ledger
+# reproduce the loop of single fits exactly — while the whole batch is
+# still one dispatch, one compilation, and no per-fit host sync.
+
+@functools.partial(jax.jit,
+                   static_argnames=("backend", "metric", "batch_size",
+                                    "delta", "sampling", "baseline", "k",
+                                    "mode", "free_rounds"))
+def _build_batch(data, subkeys, cache, spidx, spw, valid, n_valid, log_term,
+                 *, backend: str, metric: str, batch_size: int, delta,
+                 sampling: str, baseline: str, k: int, mode: str,
+                 free_rounds: int):
+    """BUILD for a [batch] of padded fits: ONE jit, ``lax.map`` over the
+    per-fit ``_build_fused`` lanes.  Every array input carries a leading
+    batch axis (``cache`` is a stacked :class:`PicCache` pytree or None).
+    Returns stacked (med_mask, medoids, cache, rounds, fresh, cached)."""
+
+    def lane(xs):
+        data_i, keys_i, cache_i, spidx_i, spw_i, valid_i, nv_i, lt_i = xs
+        (dnear, med_mask, medoids, cc, rounds_a, evals_a,
+         cached_a) = _build_fused(
+             data_i, keys_i, cache_i, None, None, spidx_i, spw_i, valid_i,
+             nv_i, lt_i, backend=backend, metric=metric,
+             batch_size=batch_size, delta=delta, sampling=sampling,
+             baseline=baseline, k=k, mode=mode, free_rounds=free_rounds)
+        del dnear  # not needed post-BUILD; keep the lane output lean
+        return med_mask, medoids, cc, rounds_a, evals_a, cached_a
+
+    return jax.lax.map(
+        lane, (data, subkeys, cache, spidx, spw, valid, n_valid, log_term))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("backend", "metric", "batch_size",
+                                    "delta", "k", "sampling", "baseline",
+                                    "early_stop", "mode", "free_rounds",
+                                    "max_swaps"))
+def _swap_batch(data, medoids, med_mask, subkeys, cache, pidx_c, pw_c,
+                spidx, spw, valid, n_valid, log_term, *, backend: str,
+                metric: str, batch_size: int, delta, k: int, sampling: str,
+                baseline: str, early_stop: bool, mode: str, free_rounds: int,
+                max_swaps: int):
+    """The whole SWAP phase for a [batch] of padded fits as ONE jit: each
+    ``lax.map`` lane runs its own accept-driven ``while_loop`` over up to
+    ``max_swaps`` fused ``_swap_iter`` steps, with the accept decision on
+    device (the same f32 rule the single-fit driver reads back).
+
+    ``pidx_c``/``pw_c`` are the per-fit carry-repair layouts over the PIC
+    ring width (``_carry_delta``); ``spidx`` the search layouts —
+    ``[batch, T, R·B]`` per-iteration permutations (``reuse="none"``) or
+    ``[batch, R·B]`` the one fixed PIC permutation.  The moment carry is
+    seeded with ZEROS on the first iteration instead of the single-fit
+    driver's ``carry=None`` cold start — equivalent by construction
+    (``_carry_delta`` over an empty prefix is the identity on zeros, and
+    ``adaptive_search`` re-derives σ from the first batch whenever
+    ``n_used == 0``), which keeps the while-loop carry a fixed pytree.
+
+    Per lane returns (medoids, loss, converged, iters, fresh, cached,
+    n_changed, exact_fallbacks, old[T], new[T], loss[T], accept[T]) —
+    everything the host needs to assemble per-fit FitReports without a
+    mid-phase sync."""
+    n = data.shape[1]
+    kn = k * n
+    T = max_swaps
+    pic = mode == "pic"
+
+    def lane(xs):
+        (data_i, meds0, mask0, keys_i, cache_i, pidx_i, pw_i, spidx_i,
+         spw_i, valid_i, nv_i, lt_i) = xs
+        loss0 = total_loss(data_i, meds0, metric=metric, w=valid_i)
+        if pic:
+            carry0 = (jnp.zeros((kn,), jnp.float32),
+                      jnp.zeros((kn,), jnp.float32), jnp.int32(0),
+                      jnp.zeros((n,), jnp.float32),
+                      jnp.zeros((n,), jnp.float32),
+                      jnp.zeros((n,), jnp.int32))
+        else:
+            carry0 = None
+
+        def cond(st):
+            return jnp.logical_and(st[0] < T, jnp.logical_not(st[1]))
+
+        def body(st):
+            (t, done, meds, mask, loss, carry, cc, fresh_s, cached_s,
+             nchg_s, exact_s, old_a, new_a, loss_a, acc_a) = st
+            pidx_t = spidx_i if spidx_i.ndim == 1 else spidx_i[t]
+            (best, new_loss, cand, new_carry, cc2, fresh, cached, nchg,
+             uexact, accept) = _swap_iter(
+                 data_i, meds, mask, keys_i[t], cc, None, None, pidx_i,
+                 pw_i, carry, loss, pidx_t, spw_i, valid_i, nv_i, lt_i,
+                 backend=backend, metric=metric, batch_size=batch_size,
+                 delta=delta, k=k, sampling=sampling, baseline=baseline,
+                 early_stop=early_stop, mode=mode, free_rounds=free_rounds)
+            x_idx = best % n
+            old = meds[best // n]
+            meds2 = jnp.where(accept, cand, meds)
+            mask2 = jnp.where(
+                accept, mask.at[old].set(False).at[x_idx].set(True), mask)
+            return (t + 1, jnp.logical_not(accept), meds2, mask2,
+                    jnp.where(accept, new_loss, loss),
+                    new_carry if pic else None, cc2,
+                    fresh_s + fresh, cached_s + cached, nchg_s + nchg,
+                    exact_s + uexact.astype(jnp.int32),
+                    old_a.at[t].set(old), new_a.at[t].set(x_idx),
+                    loss_a.at[t].set(new_loss), acc_a.at[t].set(accept))
+
+        st0 = (jnp.int32(0), jnp.bool_(False), meds0, mask0, loss0,
+               carry0, cache_i, jnp.uint32(0), jnp.uint32(0),
+               jnp.int32(0), jnp.int32(0),
+               jnp.zeros((T,), jnp.int32), jnp.zeros((T,), jnp.int32),
+               jnp.zeros((T,), jnp.float32), jnp.zeros((T,), jnp.bool_))
+        stf = jax.lax.while_loop(cond, body, st0)
+        return (stf[2], stf[4], stf[1], stf[0], stf[7], stf[8], stf[9],
+                stf[10], stf[11], stf[12], stf[13], stf[14])
+
+    return jax.lax.map(lane, (data, medoids, med_mask, subkeys, cache,
+                              pidx_c, pw_c, spidx, spw, valid, n_valid,
+                              log_term))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "T"))
+def _batch_rng_chains(seeds, *, k: int, T: int):
+    """Replicate every per-fit RNG chain in ONE dispatch: the exact
+    PRNGKey/split sequence ``fit`` walks, vmapped over the seeds (split
+    is an elementwise threefry application, so the vmapped bits are
+    identical to the sequential ones).  Returns per-fit
+    (ckey, build subkeys [k,2], swap subkeys [T,2], build perm-keys,
+    swap perm-keys) — the perm-keys being the second-level
+    ``split(sub)[1]`` that seeds each search's reference permutation."""
+
+    def chain(seed):
+        key = jax.random.PRNGKey(seed)
+        key, ckey = jax.random.split(key)
+        subs = []
+        for _ in range(k + T):
+            key, sub = jax.random.split(key)
+            subs.append(sub)
+        subs = jnp.stack(subs)
+        pkeys = jax.vmap(lambda s: jax.random.split(s)[1])(subs)
+        return ckey, subs[:k], subs[k:], pkeys[:k], pkeys[k:]
+
+    return jax.vmap(chain)(seeds)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _batch_perms(keys, *, n: int):
+    """[m, 2] keys -> [m, n] reference permutations, one dispatch (the
+    vmapped sort matches ``jax.random.permutation`` row-for-row)."""
+    return jax.vmap(
+        lambda s: jax.random.permutation(s, n).astype(jnp.int32))(keys)
 
 
 # ---------------------------------------------------------------------------
@@ -597,10 +810,10 @@ class BanditPAM:
         for _ in range(self.max_swaps):
             key, sub = jax.random.split(key)
             (best, new_loss_d, cand, new_carry, cache, fresh, cached,
-             n_changed, used_exact) = step(data, medoids, med_mask, sub,
-                                           ctx.cache, ctx.dwarm, ctx.perm,
-                                           ctx.perm_idx, ctx.perm_w, carry,
-                                           **kw)
+             n_changed, used_exact, accept) = step(
+                 data, medoids, med_mask, sub, ctx.cache, ctx.dwarm,
+                 ctx.perm, ctx.perm_idx, ctx.perm_w, carry,
+                 jnp.float32(loss), **kw)
             ctx.cache = cache
             # Under "pic", fresh counts POSITIONS and n_changed counts
             # repaired points; the n· multiplies run on host ints so the
@@ -611,8 +824,11 @@ class BanditPAM:
             res.swap_exact_fallbacks += int(used_exact)
             if ctx.mode == "pic":
                 carry = new_carry
-            new_loss = float(new_loss_d)
-            if new_loss < loss - 1e-7 * max(1.0, abs(loss)):
+            # The accept rule is evaluated ON DEVICE in f32 (inside
+            # _swap_iter) — the same comparison every fit_batch lane
+            # makes — so the two drivers cannot diverge at fp margins.
+            if bool(accept):
+                new_loss = float(new_loss_d)
                 m_idx, x_idx = divmod(int(best), n)
                 old = int(medoids[m_idx])
                 medoids = cand
@@ -628,9 +844,9 @@ class BanditPAM:
         return medoids, loss, converged
 
     def _swap_iter_stepped(self, data, medoids, med_mask, key, cache, dwarm,
-                           perm, perm_idx, perm_w, carry, *, backend, metric,
-                           batch_size, delta, k, sampling, baseline,
-                           early_stop, mode, free_rounds):
+                           perm, perm_idx, perm_w, carry, prev_loss, *,
+                           backend, metric, batch_size, delta, k, sampling,
+                           baseline, early_stop, mode, free_rounds):
         """Host-orchestrated SWAP iteration (benchmark baseline): the same
         sub-steps as ``_swap_iter`` but as separate dispatches with host
         round-trips between — the pre-refactor driver architecture."""
@@ -671,9 +887,13 @@ class BanditPAM:
         m_idx, x_idx = divmod(int(sr.best), n)
         cand = medoids.at[m_idx].set(x_idx)
         new_loss = total_loss(data, cand, metric=metric)
+        # Same f32 accept rule as the fused step (see _swap_iter).
+        accept = new_loss < prev_loss - 1e-7 * jnp.maximum(
+            1.0, jnp.abs(prev_loss))
         new_carry = (sr.sums, sr.sqsums, sr.rounds, d1, d2, assign)
         return (int(sr.best), new_loss, cand, new_carry, cache2, fresh,
-                int(sr.n_evals_cached), n_changed, int(sr.used_exact))
+                int(sr.n_evals_cached), n_changed, int(sr.used_exact),
+                accept)
 
     # -- public ----------------------------------------------------------
     def fit(self, data) -> FitResult:
@@ -704,14 +924,236 @@ class BanditPAM:
                                if ph.endswith("_cached"))
         return res
 
-    def fit_predict(self, data) -> Tuple[FitResult, np.ndarray]:
-        warnings.warn(
-            "BanditPAM.fit_predict returns a (FitReport, labels) tuple, which "
-            "diverges from the sklearn convention; use "
-            "repro.api.KMedoids(...).fit_predict for labels-only",
-            FutureWarning, stacklevel=2)
+    def fit_batch(self, datasets, seeds=None) -> BatchFitReport:
+        """Fit a batch of INDEPENDENT datasets in one dispatch per phase.
+
+        Args:
+          datasets: a ``[B, n, d]`` array, or a list of ``[n_i, d]``
+            arrays with ragged ``n_i`` (padded internally to the batch
+            maximum; pad rows are masked out of every sum, can never
+            become medoids, and carry zero reference weight).
+          seeds: optional per-fit RNG seeds, length B; default: every fit
+            uses ``self.seed`` (fits are still independent — they see
+            different data).
+
+        Each fit reproduces ``BanditPAM(seed=seeds[i]).fit(datasets[i])``
+        bit-identically — same medoids, loss, and fresh/cached ledger —
+        because every lane replays the single-fit trace: the per-fit RNG
+        chain (context key, k BUILD subkeys, per-iteration SWAP subkeys,
+        per-search reference permutations) is replicated host-side with
+        the same ``jax.random`` ops, the per-fit budget/δ ride in as
+        traced ``n_valid``/``log_term`` data, and the batch axis is a
+        ``lax.map`` scan (see ``_build_batch``).  Requires
+        ``sampling="permutation"`` and ``cache_cols=0``; under
+        ``reuse="pic"`` the ring width is resolved from the LARGEST fit,
+        so the ragged-parity guarantee holds as long as no fit recycles
+        (the default width covers every fit that would not recycle
+        solo — see docs/design.md).
+
+        Returns a :class:`BatchFitReport`: per-fit :class:`FitReport`
+        list plus batch-level ``dispatches_by_phase`` (one per phase,
+        measured) and ``wall_by_phase``.
+        """
+        if self.sampling != "permutation":
+            raise ValueError('fit_batch requires sampling="permutation" '
+                             "(per-fit reference layouts are precomputed)")
+        if self.cache_cols > 0:
+            raise ValueError("fit_batch does not support cache_cols warm "
+                             "blocks (ragged per-fit warm widths would "
+                             "need per-fit traces); use reuse='pic'")
+        if isinstance(datasets, (list, tuple)):
+            arrs = [np.asarray(a, np.float32) for a in datasets]
+        else:
+            a = np.asarray(datasets, np.float32)
+            if a.ndim != 3:
+                raise ValueError(f"expected [B, n, d] batch or a list of "
+                                 f"[n_i, d] arrays, got shape {a.shape}")
+            arrs = [a[i] for i in range(a.shape[0])]
+        if not arrs:
+            raise ValueError("empty batch")
+        if any(x.ndim != 2 for x in arrs):
+            raise ValueError("every dataset must be [n_i, d]")
+        if len({x.shape[1] for x in arrs}) != 1:
+            raise ValueError("all datasets must share the feature dim")
+        ns = [x.shape[0] for x in arrs]
+        if min(ns) <= self.k:
+            raise ValueError("need n > k in every dataset")
+        if seeds is None:
+            seeds = [self.seed] * len(arrs)
+        seeds = [int(s) for s in seeds]
+        if len(seeds) != len(arrs):
+            raise ValueError(f"{len(seeds)} seeds for {len(arrs)} datasets")
+
+        bf, n_max, dim = len(arrs), max(ns), arrs[0].shape[1]
+        k, B, T = self.k, self.batch_size, self.max_swaps
+        backend = resolve_stats_backend(self.backend, self.metric)
+        pic = self.reuse == "pic"
+        rb = -(-n_max // B) * B           # search-layout width (R·B)
+        data = np.zeros((bf, n_max, dim), np.float32)
+        valid = np.zeros((bf, n_max), bool)
+        for i, x in enumerate(arrs):
+            data[i, : ns[i]] = x
+            valid[i, : ns[i]] = True
+
+        # -- host-side replication of every per-fit RNG chain ------------
+        # (jax.random keys/splits/permutations are deterministic bit ops,
+        # identical inside and outside jit — and identical under vmap, so
+        # the whole batch's chains are ONE dispatch plus one permutation
+        # dispatch per distinct n, not ~70 tiny ops per fit)
+        spw = np.zeros((bf, rb), np.float32)
+        log_b = np.zeros((bf,), np.float32)
+        log_s = np.zeros((bf,), np.float32)
+        sp_build = None if pic else np.zeros((bf, k, rb), np.int32)
+        sp_swap = None if pic else np.zeros((bf, T, rb), np.int32)
+        sp_pic = np.zeros((bf, rb), np.int32) if pic else None
+        if pic:
+            wcap = resolve_batch_cache_rounds(ns, B, self.cache_width)
+            pidx_c = np.zeros((bf, wcap * B), np.int32)
+            pw_c = np.zeros((bf, wcap * B), np.float32)
+        else:
+            wcap, pidx_c, pw_c = 0, None, None
+
+        ckeys, bkeys, skeys, bpk, spk = _batch_rng_chains(
+            jnp.asarray(seeds), k=k, T=T)
+        bkeys, skeys = np.asarray(bkeys), np.asarray(skeys)
+
+        def tiled(perm_np, width):
+            return np.tile(perm_np, -(-width // perm_np.shape[-1])
+                           )[..., :width]
+
+        by_n: dict = {}
+        for i, n_i in enumerate(ns):
+            by_n.setdefault(n_i, []).append(i)
+        for n_i, idxs in by_n.items():
+            ii = np.asarray(idxs)
+            if pic:
+                # one fixed permutation per fit, from the context key
+                perms = np.asarray(_batch_perms(ckeys[ii], n=n_i))
+                sp_pic[ii] = tiled(perms, rb)
+                pidx_c[ii] = tiled(perms, wcap * B)
+                pw_c[ii] = np.arange(wcap * B) < n_i
+            else:
+                # one permutation per search: k BUILD + T SWAP, batched
+                pkeys = jnp.concatenate(
+                    [bpk[ii].reshape(-1, 2), spk[ii].reshape(-1, 2)])
+                perms = np.asarray(_batch_perms(pkeys, n=n_i))
+                g = len(ii)
+                sp_build[ii] = tiled(perms[:g * k].reshape(g, k, n_i), rb)
+                sp_swap[ii] = tiled(perms[g * k:].reshape(g, T, n_i), rb)
+        for i, n_i in enumerate(ns):
+            spw[i] = np.arange(rb) < n_i
+        d_b = [self.delta if self.delta is not None
+               else 1.0 / (1000.0 * n_i) for n_i in ns]
+        d_s = [self.delta if self.delta is not None
+               else 1.0 / (1000.0 * k * n_i) for n_i in ns]
+        # bit-for-bit the expression adaptive_search folds at trace time,
+        # jnp.float32(jnp.log(1.0 / d)): the reciprocal in f64, the cast
+        # and the log in f32 — vectorised to two dispatches for the batch
+        log_b[:] = np.asarray(jnp.log(jnp.asarray(
+            1.0 / np.asarray(d_b, np.float64), jnp.float32)))
+        log_s[:] = np.asarray(jnp.log(jnp.asarray(
+            1.0 / np.asarray(d_s, np.float64), jnp.float32)))
+
+        # The batched FitContext: same container as the single-fit path,
+        # leading [batch] axis on every array field (batch > 0).
+        ctx = FitContext(
+            mode="pic" if pic else "none", backend=backend,
+            perm_idx=None if pidx_c is None else jnp.asarray(pidx_c),
+            perm_w=None if pw_c is None else jnp.asarray(pw_c),
+            cache=(PicCache(
+                cols=jnp.zeros((bf, n_max, wcap * B), jnp.float32),
+                hw=jnp.zeros((bf,), jnp.int32),
+                fresh_pos=jnp.zeros((bf,), jnp.uint32)) if pic else None),
+            batch=bf, valid=jnp.asarray(valid),
+            n_valid=jnp.asarray(ns, jnp.int32),
+            log_build=jnp.asarray(log_b), log_swap=jnp.asarray(log_s),
+            spidx_build=jnp.asarray(sp_pic if pic else sp_build),
+            spidx_swap=jnp.asarray(sp_pic if pic else sp_swap),
+            spw=jnp.asarray(spw))
+        dataj = jnp.asarray(data)
+        disp: dict = {}
+        kw = dict(backend=backend, metric=self.metric, batch_size=B,
+                  delta=self.delta, sampling=self.sampling,
+                  baseline=self.baseline, k=k, mode=ctx.mode, free_rounds=0)
+
+        t0 = time.perf_counter()
+        bphase = counted_dispatch(_build_batch, disp, "build")
+        (med_mask, medoids, cache, rounds_a, evals_a, cached_a) = bphase(
+            dataj, jnp.asarray(bkeys), ctx.cache, ctx.spidx_build, ctx.spw,
+            ctx.valid, ctx.n_valid, ctx.log_build, **kw)
+        jax.block_until_ready(medoids)
+        ctx.cache = cache
+        wall = {"build": time.perf_counter() - t0}
+
+        kw.pop("sampling")
+        t0 = time.perf_counter()
+        sphase = counted_dispatch(_swap_batch, disp, "swap")
+        (meds_f, loss_f, conv, iters, fresh_s, cached_s, nchg_s, exact_s,
+         old_a, new_a, loss_a, acc_a) = sphase(
+             dataj, medoids, med_mask, jnp.asarray(skeys), ctx.cache,
+             ctx.perm_idx, ctx.perm_w, ctx.spidx_swap, ctx.spw, ctx.valid,
+             ctx.n_valid, ctx.log_swap, sampling=self.sampling,
+             early_stop=self.swap_early_stop, max_swaps=T, **kw)
+        jax.block_until_ready(loss_f)
+        wall["swap"] = time.perf_counter() - t0
+
+        # -- per-fit ledger assembly (host ints: no uint32 wrap) ---------
+        meds_np, loss_np = np.asarray(meds_f), np.asarray(loss_f)
+        conv_np, iters_np = np.asarray(conv), np.asarray(iters, np.int64)
+        rounds_np = np.asarray(rounds_a, np.int64)
+        bev_np = np.asarray(evals_a, np.int64)
+        bca_np = np.asarray(cached_a, np.int64)
+        fresh_np, cached_np = (np.asarray(fresh_s, np.int64),
+                               np.asarray(cached_s, np.int64))
+        nchg_np, exact_np = (np.asarray(nchg_s, np.int64),
+                             np.asarray(exact_s, np.int64))
+        old_np, new_np = np.asarray(old_a), np.asarray(new_a)
+        la_np, acc_np = np.asarray(loss_a), np.asarray(acc_a)
+        reports = []
+        for i, n_i in enumerate(ns):
+            scale = n_i if pic else 1
+            res = FitReport(medoids=meds_np[i].astype(np.int64),
+                            loss=float(loss_np[i]), n_swaps=0,
+                            converged=bool(conv_np[i]), distance_evals=0)
+            res.build_rounds = [int(r) for r in rounds_np[i]]
+            res.evals_by_phase["build"] = (scale * int(bev_np[i].sum())
+                                           + n_i * k)
+            if pic:
+                res.evals_by_phase["build_cached"] = int(bca_np[i].sum())
+            it = int(iters_np[i])
+            res.evals_by_phase["swap"] = (it * 2 * n_i * k
+                                          + scale * int(fresh_np[i]))
+            if pic:
+                res.evals_by_phase["swap_cached"] = (
+                    int(cached_np[i]) + n_i * int(nchg_np[i]))
+            res.swap_exact_fallbacks = int(exact_np[i])
+            for t in range(it):
+                if acc_np[i, t]:
+                    res.swap_history.append((int(old_np[i, t]),
+                                             int(new_np[i, t]),
+                                             float(la_np[i, t])))
+            res.n_swaps = len(res.swap_history)
+            res.distance_evals = sum(
+                v for ph, v in res.evals_by_phase.items()
+                if not ph.endswith("_cached"))
+            res.cached_evals = sum(
+                v for ph, v in res.evals_by_phase.items()
+                if ph.endswith("_cached"))
+            reports.append(res)
+        return BatchFitReport(reports=reports, medoids=meds_np,
+                              loss=loss_np.astype(np.float64),
+                              n_valid=np.asarray(ns, np.int64),
+                              wall_by_phase=wall, dispatches_by_phase=disp)
+
+    def fit_predict(self, data) -> np.ndarray:
+        """Fit and return the in-sample cluster labels, [n] — the sklearn
+        convention.  (The legacy ``(FitReport, labels)`` tuple return was
+        FutureWarning-deprecated and is now removed; call :meth:`fit` for
+        the full report — it carries the same medoids/ledger, and the
+        facade ``repro.api.KMedoids`` fills ``report.labels``.)"""
         res = self.fit(data)
         data = jnp.asarray(data, jnp.float32)
-        _, _, assign = medoid_cache(data, jnp.asarray(res.medoids),
+        _, _, assign = medoid_cache(data, jnp.asarray(res.medoids,
+                                                      jnp.int32),
                                     metric=self.metric)
-        return res, np.asarray(assign)
+        return np.asarray(assign)

@@ -76,9 +76,17 @@ def medoid_cache(data: jnp.ndarray, medoids: jnp.ndarray, *, metric: str
 
 
 @functools.partial(jax.jit, static_argnames=("metric",))
-def total_loss(data: jnp.ndarray, medoids: jnp.ndarray, *, metric: str) -> jnp.ndarray:
+def total_loss(data: jnp.ndarray, medoids: jnp.ndarray, *, metric: str,
+               w=None) -> jnp.ndarray:
+    """Sum of nearest-medoid dissimilarities.  ``w`` (optional bool [n])
+    masks rows out of the sum — the batched multi-fit path scores padded
+    datasets with it (``jnp.where``, not a multiply, so NaN rows from
+    degenerate pad points cannot poison the loss)."""
     dmat = get_metric(metric)(data, data[medoids])
-    return jnp.sum(jnp.min(dmat, axis=1))
+    dmin = jnp.min(dmat, axis=1)
+    if w is None:
+        return jnp.sum(dmin)
+    return jnp.sum(jnp.where(w, dmin, 0.0))
 
 
 def _ref_chunks(n_ref: int, chunk: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -395,6 +403,16 @@ class FitContext:
       ring of ``cache_width`` columns with round recycling; searches
       write fresh blocks through from inside the bandit loop, and rounds
       whose slot was recycled fall back to fresh recomputation.
+
+    ``batch > 0`` marks a BATCHED context (``BanditPAM.fit_batch``): the
+    array fields gain a leading ``[batch]`` fit axis (``cache.cols`` is
+    ``[batch, n, W·B]``, ``perm_idx`` is ``[batch, W·B]``, ...) and the
+    batch-only fields below are populated — per-fit validity masks for
+    padded ragged datasets, per-fit logical n, per-fit ``log(1/δ)`` terms
+    (δ depends on n, which is ragged), and the pre-tiled per-search
+    reference-permutation layouts that the single-fit path would generate
+    inside the search from its RNG chain (they must be data, not trace
+    constants, once n is ragged).
     """
 
     mode: str                              # "none" | "warm" | "pic"
@@ -406,3 +424,14 @@ class FitContext:
     #                                        capacity W = cols.shape[1] // B
     dwarm: Optional[jnp.ndarray] = None    # [n, C] warm columns ("warm")
     free_rounds: int = 0                   # static warm-block rounds ("warm")
+    # -- batched multi-fit fields (leading [batch] axis when batch > 0) --
+    batch: int = 0                         # fit count; 0 = single-fit context
+    valid: Optional[jnp.ndarray] = None    # [batch, n] bool row-validity
+    n_valid: Optional[jnp.ndarray] = None  # [batch] int32 logical n per fit
+    log_build: Optional[jnp.ndarray] = None   # [batch] f32 log(1/δ_build)
+    log_swap: Optional[jnp.ndarray] = None    # [batch] f32 log(1/δ_swap)
+    spidx_build: Optional[jnp.ndarray] = None  # [batch, k, R·B] or
+    #                                            [batch, R·B] search layouts
+    spidx_swap: Optional[jnp.ndarray] = None   # [batch, T, R·B] or
+    #                                            [batch, R·B]
+    spw: Optional[jnp.ndarray] = None      # [batch, R·B] {0,1} weights

@@ -55,8 +55,9 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["PicCache", "DEFAULT_CACHE_ROUNDS", "resolve_cache_rounds",
-           "make_cache", "cache_read_or_write", "cache_advance",
-           "shard_slot_read_write", "carry_valid", "fresh_positions"]
+           "resolve_batch_cache_rounds", "make_cache",
+           "cache_read_or_write", "cache_advance", "shard_slot_read_write",
+           "carry_valid", "fresh_positions"]
 
 # Default width cap in round-blocks: generous enough that tier-scale fits
 # (n up to a few thousand at B=100) never recycle — their ledgers stay
@@ -103,6 +104,18 @@ def resolve_cache_rounds(n_rounds_max: int, batch_size: int,
             f"cache_width={cache_width} is narrower than one round-batch "
             f"(batch_size={batch_size}); need cache_width >= batch_size")
     return max(1, min(n_rounds_max, cache_width // batch_size))
+
+
+def resolve_batch_cache_rounds(ns, batch_size: int,
+                               cache_width: Optional[int] = None) -> int:
+    """One ring width for a BATCH of padded fits (``fit_batch``): the max
+    of each fit's solo-resolved width, so every lane gets at least the
+    ring it would have had alone — the bit-parity guarantee of the
+    batched path then holds exactly as far as the single-fit one does
+    (a fit that would not recycle solo does not recycle in the batch).
+    Lanes with smaller n simply leave their trailing slots cold."""
+    return max(resolve_cache_rounds(-(-int(n) // batch_size), batch_size,
+                                    cache_width) for n in ns)
 
 
 def make_cache(n_rows: int, block: int, rounds: int) -> PicCache:

@@ -26,7 +26,7 @@ after the solve; solvers themselves only need medoids + loss + ledger.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -69,3 +69,55 @@ class FitReport:
             "cached": int(self.cached_evals),
             "by_phase": {k: int(v) for k, v in self.evals_by_phase.items()},
         }
+
+
+@dataclass
+class BatchFitReport:
+    """The result of one batched multi-fit (``BanditPAM.fit_batch`` /
+    ``KMedoids.fit_batch``): B independent fits solved in one dispatch
+    per phase.
+
+    ``reports`` holds one full per-fit :class:`FitReport` each — medoids,
+    loss, and the fresh/cached ledger, bit-identical to what the
+    single-fit path would have produced for the same per-fit seed (the
+    invariant ``tests/test_multifit.py`` pins).  The batch-level fields
+    are what is NOT per-fit:
+
+    * ``dispatches_by_phase`` — measured at the driver call site
+      (``engine.counted_dispatch``), for the WHOLE batch: the batched
+      engine compiles to one jit per phase, so this reads
+      ``{"build": 1, "swap": 1}`` regardless of B (the per-fit reports
+      leave theirs empty — a lane inside a batched dispatch has no
+      dispatch count of its own).
+    * ``wall_by_phase`` — batch wall-clock per phase; divide by
+      ``len(batch)`` for the amortised per-fit cost
+      (``benchmarks/multifit_bench.py``).
+    * ``medoids``/``loss`` — the stacked ``[B, k]`` / ``[B]`` views.
+    * ``labels`` — stacked ``[B, n_max]`` in-sample assignments (filled
+      by the facade; pad rows carry arbitrary labels — mask with
+      ``n_valid``).
+    * ``n_valid`` — the logical per-fit n of the (possibly ragged,
+      padded) inputs.
+
+    The container is sequence-like: ``len(batch)``, ``batch[i]``, and
+    iteration yield the per-fit reports.
+    """
+
+    reports: List[FitReport]
+    medoids: np.ndarray                     # [B, k]
+    loss: np.ndarray                        # [B]
+    n_valid: Optional[np.ndarray] = None    # [B] logical n per fit
+    labels: Optional[np.ndarray] = None     # [B, n_max]
+    solver: str = ""
+    metric: str = ""
+    wall_by_phase: Dict[str, float] = field(default_factory=dict)
+    dispatches_by_phase: Dict[str, int] = field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.reports)
+
+    def __getitem__(self, i: int) -> FitReport:
+        return self.reports[i]
+
+    def __iter__(self) -> Iterator[FitReport]:
+        return iter(self.reports)

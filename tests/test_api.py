@@ -220,11 +220,19 @@ def test_facade_fit_predict_returns_labels_only(data):
     assert np.array_equal(labels, est.labels_)
 
 
-def test_legacy_fit_predict_warns_about_tuple_shape(data):
-    with pytest.warns(FutureWarning, match="fit_predict"):
-        res, labels = BanditPAM(2, metric="l2", seed=0).fit_predict(data[:80])
-    assert isinstance(res, FitReport)
-    assert labels.shape == (80,)
+def test_fit_predict_deprecation_completed(data):
+    """The FutureWarned (FitReport, labels) tuple is gone: BanditPAM's
+    fit_predict now returns labels only (sklearn convention), silently,
+    and agrees with the facade's in-sample assignment."""
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")     # any warning -> test failure
+        labels = BanditPAM(2, metric="l2", seed=0).fit_predict(data[:80])
+    assert isinstance(labels, np.ndarray) and labels.shape == (80,)
+    assert labels.dtype.kind == "i" and set(np.unique(labels)) <= {0, 1}
+    facade = KMedoids(2, solver="banditpam", metric="l2", seed=0)
+    assert np.array_equal(labels, facade.fit_predict(data[:80]))
 
 
 def test_unknown_solver_and_metric_fail_fast(data):

@@ -1,0 +1,257 @@
+"""Differential harness for the batched multi-fit engine.
+
+The contract under test (ISSUE 6): ``fit_batch`` on a ``[B, n, d]`` batch
+must reproduce the loop of single ``fit`` calls BIT-identically per fit —
+same medoids (same order), same loss bits, same fresh/cached ledger, same
+swap history — for the same per-fit seed, on both stats backends, with and
+without the BanditPAM++ PIC cache, including ragged per-fit n via padding
+masks.  The only sanctioned divergence is the final LOSS reduction on a
+ragged batch: the masked sum over ``[n_max]`` may split the f32 reduction
+tree differently from the plain sum over ``[n_i]`` (~1 ulp) — medoids,
+integer ledgers, and swap decisions must still match exactly, so the
+ragged tests pin those to the bit and the loss to a tight allclose.
+
+Also locks down: one jit per phase (measured ``dispatches_by_phase``),
+B=1 degeneracy, per-fit seed independence (batch-permutation
+equivariance), and the golden ledger fixtures in
+``tests/fixtures/ledgers.json`` (regenerate with ``REGEN_GOLDEN=1``).
+"""
+import json
+import os
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.api import KMedoids
+from repro.core import BanditPAM, datasets
+
+K = 3
+FIXTURE = pathlib.Path(__file__).parent / "fixtures" / "ledgers.json"
+
+
+def _make_batch(ns, seed0=100):
+    return [np.asarray(datasets.hoc4_like(n, seed=seed0 + i), np.float32)
+            for i, n in enumerate(ns)]
+
+
+def _single_fits(Xs, seeds, *, metric, reuse, backend, **kw):
+    return [BanditPAM(K, metric=metric, seed=s, reuse=reuse,
+                      backend=backend, **kw).fit(X)
+            for X, s in zip(Xs, seeds)]
+
+
+def _assert_fit_equal(got, want, *, exact_loss=True, tag=""):
+    """Bit-parity between one lane of a batch report and a single fit."""
+    assert np.array_equal(np.asarray(got.medoids),
+                          np.asarray(want.medoids)), tag
+    if exact_loss:
+        assert float(got.loss) == float(want.loss), tag
+    else:
+        np.testing.assert_allclose(got.loss, want.loss, rtol=1e-5,
+                                   err_msg=tag)
+    assert got.distance_evals == want.distance_evals, tag
+    assert got.cached_evals == want.cached_evals, tag
+    assert got.evals_by_phase == want.evals_by_phase, tag
+    assert got.n_swaps == want.n_swaps, tag
+    assert got.converged == want.converged, tag
+    assert got.build_rounds == want.build_rounds, tag
+    assert len(got.swap_history) == len(want.swap_history), tag
+    for (go, gn, gl), (wo, wn, wl) in zip(got.swap_history,
+                                          want.swap_history):
+        assert (go, gn) == (wo, wn), tag
+        if exact_loss:
+            assert float(gl) == float(wl), tag
+        else:
+            np.testing.assert_allclose(gl, wl, rtol=1e-5, err_msg=tag)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole invariant: fit_batch == loop of fit, to the bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,reuse", [
+    ("jnp", "none"), ("jnp", "pic"),
+    ("pallas", "none"), ("pallas", "pic"),
+])
+@pytest.mark.parametrize("metric", ["l1", "l2"])
+def test_batch_matches_loop_uniform(backend, reuse, metric):
+    """Uniform n: FULL bit-parity, loss bits included, on both backends."""
+    n = 40 if backend == "pallas" else 60
+    Xs = _make_batch([n, n, n])
+    seeds = [1, 2, 3]
+    est = BanditPAM(K, metric=metric, seed=0, reuse=reuse, backend=backend)
+    batch = est.fit_batch(Xs, seeds=seeds)
+    singles = _single_fits(Xs, seeds, metric=metric, reuse=reuse,
+                           backend=backend)
+    assert len(batch) == 3
+    for i, want in enumerate(singles):
+        _assert_fit_equal(batch[i], want, exact_loss=True,
+                          tag=f"fit {i} ({backend}/{reuse}/{metric})")
+    if reuse == "pic":
+        assert all(r.cached_evals > 0 for r in batch)
+
+
+@pytest.mark.parametrize("backend,reuse", [
+    ("jnp", "none"), ("jnp", "pic"),
+    ("pallas", "none"), ("pallas", "pic"),
+])
+def test_batch_matches_loop_ragged(backend, reuse):
+    """Ragged per-fit n: medoids, integer ledgers, swap decisions, and
+    build rounds stay EXACT; only the final loss reduction is allowed the
+    ~1-ulp masked-sum drift (see module docstring)."""
+    ns = [24, 40, 17] if backend == "pallas" else [47, 60, 33]
+    Xs = _make_batch(ns)
+    seeds = [7, 8, 9]
+    est = BanditPAM(K, metric="l1", seed=0, reuse=reuse, backend=backend)
+    batch = est.fit_batch(Xs, seeds=seeds)
+    singles = _single_fits(Xs, seeds, metric="l1", reuse=reuse,
+                           backend=backend)
+    for i, want in enumerate(singles):
+        _assert_fit_equal(batch[i], want, exact_loss=False,
+                          tag=f"fit {i} n={ns[i]} ({backend}/{reuse})")
+
+
+def test_batch_of_one_degenerates_to_single_fit():
+    X = _make_batch([55])[0]
+    batch = BanditPAM(K, metric="l2", seed=0).fit_batch([X], seeds=[5])
+    single = BanditPAM(K, metric="l2", seed=5).fit(X)
+    assert len(batch) == 1
+    _assert_fit_equal(batch[0], single, exact_loss=True, tag="B=1")
+    assert batch.dispatches_by_phase == {"build": 1, "swap": 1}
+
+
+def test_one_jit_per_phase_at_b8():
+    """The acceptance gate: B >= 8 fits compile to ONE dispatch per phase
+    (measured by counted_dispatch, not inferred)."""
+    Xs = _make_batch([48] * 8)
+    batch = BanditPAM(K, metric="l1", seed=0).fit_batch(
+        Xs, seeds=list(range(8)))
+    assert batch.dispatches_by_phase == {"build": 1, "swap": 1}
+    assert len(batch) == 8
+    assert set(batch.wall_by_phase) == {"build", "swap"}
+
+
+def test_per_fit_seed_independence_batch_permutation():
+    """Fits are independent: permuting (dataset, seed) pairs permutes the
+    per-fit results bit-for-bit — no cross-lane leakage through the batch
+    axis, the RNG chains, or the shared PIC ring."""
+    Xs = _make_batch([50, 50, 50, 50])
+    seeds = [11, 12, 13, 14]
+    perm = [2, 0, 3, 1]
+    for reuse in ("none", "pic"):
+        est = BanditPAM(K, metric="l1", seed=0, reuse=reuse)
+        a = est.fit_batch(Xs, seeds=seeds)
+        b = est.fit_batch([Xs[p] for p in perm], seeds=[seeds[p] for p in perm])
+        for j, p in enumerate(perm):
+            _assert_fit_equal(b[j], a[p], exact_loss=True,
+                              tag=f"lane {j}<-{p} ({reuse})")
+
+
+def test_same_seed_different_data_diverges():
+    """Sharing one seed across the batch must NOT share outcomes — the
+    data, not the RNG chain, drives each fit."""
+    Xs = _make_batch([50, 50], seed0=300)
+    batch = BanditPAM(K, metric="l1", seed=4).fit_batch(Xs)  # seeds=None
+    assert not np.array_equal(np.asarray(batch[0].medoids),
+                              np.asarray(batch[1].medoids)) \
+        or float(batch[0].loss) != float(batch[1].loss)
+
+
+# ---------------------------------------------------------------------------
+# Facade: KMedoids.fit_batch
+# ---------------------------------------------------------------------------
+
+def test_facade_fit_batch_labels_and_state():
+    ns = [47, 60, 33]
+    Xs = _make_batch(ns)
+    est = KMedoids(K, solver="banditpam_pp", metric="l1", seed=0,
+                   backend="jnp")
+    rep = est.fit_batch(Xs, seeds=[1, 2, 3])
+    assert rep.dispatches_by_phase == {"build": 1, "swap": 1}
+    assert rep.labels.shape == (3, max(ns))
+    assert rep.solver == "banditpam_pp" and rep.metric == "l1"
+    # labels on the VALID rows match the single-fit facade labels
+    for i, (X, n) in enumerate(zip(Xs, ns)):
+        single = KMedoids(K, solver="banditpam_pp", metric="l1",
+                          seed=1 + i, backend="jnp").fit(X)
+        assert np.array_equal(rep.labels[i, :n], single.labels_)
+        assert np.array_equal(rep.medoids[i], single.medoids_)
+    # a batch fit must NOT install single-fit state
+    assert est.report_ is None and est.medoids_ is None
+    with pytest.raises(ValueError, match="not fitted"):
+        est.predict(Xs[0])
+
+
+def test_facade_rejects_unbatchable_configs():
+    Xs = _make_batch([30, 30])
+    with pytest.raises(ValueError, match="no batched entrypoint"):
+        KMedoids(K, solver="pam").fit_batch(Xs)
+    with pytest.raises(KeyError, match="unknown solver"):
+        KMedoids(K, solver="nope").fit_batch(Xs)
+    with pytest.raises(ValueError, match="precomputed"):
+        KMedoids(K, metric="precomputed").fit_batch(Xs)
+    with pytest.raises(ValueError, match='sampling="permutation"'):
+        BanditPAM(K, sampling="uniform").fit_batch(Xs)
+    with pytest.raises(ValueError, match="cache_cols"):
+        BanditPAM(K, cache_cols=32).fit_batch(Xs)
+    with pytest.raises(ValueError, match="seeds"):
+        BanditPAM(K).fit_batch(Xs, seeds=[1])
+    with pytest.raises(ValueError, match="feature dim"):
+        BanditPAM(K).fit_batch([Xs[0], Xs[1][:, :2]])
+    with pytest.raises(ValueError, match="n > k"):
+        BanditPAM(K).fit_batch([Xs[0], Xs[1][:K]])
+
+
+# ---------------------------------------------------------------------------
+# Golden ledgers: tests/fixtures/ledgers.json pins the exact medoids, loss
+# bits, and fresh/cached ledger of canonical configs.  ANY bit drift in the
+# sampling layout, CI maths, or accept rule fails here first.  Regenerate
+# (after an INTENDED change, with the diff reviewed) via:
+#     REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_multifit.py -k golden
+# ---------------------------------------------------------------------------
+
+GOLDEN_CONFIGS = {
+    "l1_none": dict(metric="l1", reuse="none"),
+    "l1_pic": dict(metric="l1", reuse="pic"),
+    "l2_pic_leader": dict(metric="l2", reuse="pic", baseline="leader"),
+}
+
+
+def _golden_record(cfg):
+    Xs = _make_batch([47, 60, 33], seed0=200)
+    batch = BanditPAM(K, seed=0, backend="jnp", **cfg).fit_batch(
+        Xs, seeds=[1, 2, 3])
+    return [{
+        "medoids": np.asarray(r.medoids).tolist(),
+        # float().hex() is exact — a single-ulp drift changes the string
+        "loss_hex": float(r.loss).hex(),
+        "distance_evals": r.distance_evals,
+        "cached_evals": r.cached_evals,
+        "evals_by_phase": dict(r.evals_by_phase),
+        "swap_history": [[o, x, float(l).hex()]
+                         for o, x, l in r.swap_history],
+        "build_rounds": list(r.build_rounds),
+    } for r in batch]
+
+
+def test_golden_ledgers_bit_stable():
+    if os.environ.get("REGEN_GOLDEN"):
+        FIXTURE.parent.mkdir(exist_ok=True)
+        FIXTURE.write_text(json.dumps(
+            {name: _golden_record(cfg)
+             for name, cfg in GOLDEN_CONFIGS.items()}, indent=1) + "\n")
+        pytest.skip(f"regenerated {FIXTURE}")
+    assert FIXTURE.exists(), \
+        f"missing {FIXTURE}; regenerate with REGEN_GOLDEN=1"
+    golden = json.loads(FIXTURE.read_text())
+    assert set(golden) == set(GOLDEN_CONFIGS)
+    for name, cfg in GOLDEN_CONFIGS.items():
+        got = _golden_record(cfg)
+        want = golden[name]
+        assert len(got) == len(want), name
+        for i, (g, w) in enumerate(zip(got, want)):
+            assert g == w, (
+                f"golden ledger drift in {name!r} fit {i}:\n"
+                f"  got  {json.dumps(g, sort_keys=True)}\n"
+                f"  want {json.dumps(w, sort_keys=True)}")

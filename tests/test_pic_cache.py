@@ -10,6 +10,7 @@ import pytest
 from repro.core import BanditPAM, datasets, clarans, voronoi_iteration
 from repro.core.baselines import _voronoi_update
 from repro.core.pic_cache import (DEFAULT_CACHE_ROUNDS, make_cache,
+                                  resolve_batch_cache_rounds,
                                   resolve_cache_rounds)
 
 
@@ -177,3 +178,20 @@ def test_clarans_quality_unchanged():
     r = clarans(data, k=3, metric="l2", seed=0, max_neighbors=80)
     v = voronoi_iteration(data, k=3, metric="l2", seed=0)
     assert r.loss <= v.loss * 1.25          # same quality tier as before
+
+
+def test_resolve_batch_cache_rounds_is_max_of_solo_widths():
+    """The batched ring width must cover every lane's solo ring: a fit
+    that would not recycle alone must not recycle in the batch (the
+    bit-parity guarantee of fit_batch under reuse="pic")."""
+    ns, B = [47, 260, 33], 100
+    solo = [resolve_cache_rounds(-(-n // B), B, None) for n in ns]
+    assert resolve_batch_cache_rounds(ns, B) == max(solo)
+    # explicit width caps propagate through the same clamping
+    assert resolve_batch_cache_rounds(ns, B, cache_width=200) == max(
+        resolve_cache_rounds(-(-n // B), B, 200) for n in ns)
+    # degenerate single-lane batch == the solo resolution
+    assert resolve_batch_cache_rounds([512], B) == resolve_cache_rounds(
+        -(-512 // B), B, None)
+    with pytest.raises(ValueError, match="narrower"):
+        resolve_batch_cache_rounds(ns, B, cache_width=10)
