@@ -10,7 +10,10 @@ stats-backend × fused/stepped driver, median of >= 3 reps) to
 ``BENCH_core.json`` next to it, the sharded-engine sweep
 (``banditpam_dist`` on simulated devices vs the single-device solver) to
 ``BENCH_distributed.json``, and the batched multi-fit throughput sweep
-(``fit_batch`` vs the Python loop at B=64) to ``BENCH_multifit.json``.
+(``fit_batch`` vs the Python loop at B=64) to ``BENCH_multifit.json``,
+and the serving-layer sweep (p50/p99 predict latency,
+refit-behind-traffic throughput, warm-vs-cold refit ledger) to
+``BENCH_serve.json``.
 ``--solver`` (repeatable) restricts the solver sweep to named solvers."""
 from __future__ import annotations
 
@@ -25,7 +28,7 @@ def main(argv=None) -> None:
 
     from . import (core_bench, distributed_bench, kernels_bench,
                    loss_quality, multifit_bench, roofline, scaling_n,
-                   sigma_adaptivity, solvers, violation_pca)
+                   serve_bench, sigma_adaptivity, solvers, violation_pca)
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", nargs="?", const="BENCH_solvers.json",
@@ -45,11 +48,12 @@ def main(argv=None) -> None:
             os.path.join(outdir, "BENCH_distributed.json"))
         multifit_bench.write_json(
             os.path.join(outdir, "BENCH_multifit.json"))
+        serve_bench.write_json(os.path.join(outdir, "BENCH_serve.json"))
         return
     failed = []
     for mod in (loss_quality, scaling_n, sigma_adaptivity, violation_pca,
                 solvers, core_bench, distributed_bench, multifit_bench,
-                kernels_bench, roofline):
+                serve_bench, kernels_bench, roofline):
         try:
             if mod is solvers:
                 mod.sweep(solvers=args.solver)

@@ -1,0 +1,143 @@
+"""Serving-layer benchmark: predict latency, refit-behind-traffic
+throughput, and the warm-vs-cold refit ledger.
+
+Three numbers the streaming ``MedoidService`` (ISSUE 7) stands on:
+
+* **p50/p99 predict latency** — per-request wall times through the
+  cached jitted closure (``repro.api.predict.get_predict_fn``): after
+  the first bucket compile, every request is one dispatch; the p99/p50
+  gap is the retrace test.
+* **refit-behind-traffic throughput** — rows/s ingested over a drifted
+  stream INCLUDING every drift-triggered warm refit the monitor fires;
+  the cost of staying fitted, not just of serving.
+* **warm vs cold refit ledger** — the same refit sample + seed solved
+  both ways; the JSON carries both ledgers and the sanity gate asserts
+  the warm refit actually reused work (nonzero cached fraction) and
+  skipped BUILD (zero build evals).
+
+``benchmarks/run.py --json`` serialises this as ``BENCH_serve.json``
+(a CI artifact next to ``BENCH_multifit.json``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+
+import jax
+import numpy as np
+
+from repro.core import datasets
+from repro.serve import MedoidService
+
+from .common import FULL, emit, timed
+
+K = 5
+N_FIT = 2000 if FULL else 600
+N_STREAM = 2000 if FULL else 800
+REQ_ROWS = 256                   # rows per predict request
+N_REQ = 200 if FULL else 60      # timed predict requests
+CHUNK = 120                      # ingest chunk (rows)
+D = 64
+
+
+def _quantile(xs, q):
+    return float(np.quantile(np.asarray(xs, np.float64), q))
+
+
+def sweep(n_fit=N_FIT, n_stream=N_STREAM, k=K, seed=0):
+    X = datasets.make("mnist_like", n_fit, seed=seed, d=D)
+    svc = MedoidService(k, "l2", backend="jnp",
+                        reservoir_size=min(512, n_fit),
+                        drift_threshold=0.2, drift_window=200,
+                        request_chunk=REQ_ROWS, seed=seed)
+    _, fit_wall = timed(lambda: svc.fit(X))
+
+    # -- predict latency over fixed-size requests (closure pre-warmed by
+    # fit's reservoir seeding; first timed request is steady-state)
+    queries = datasets.make("mnist_like", REQ_ROWS * 4, seed=seed + 1, d=D)
+    walls = []
+    for i in range(N_REQ):
+        lo = (i * REQ_ROWS) % (REQ_ROWS * 3)
+        _, w = timed(svc.predict, queries[lo:lo + REQ_ROWS])
+        walls.append(w)
+    p50, p99 = _quantile(walls, 0.5), _quantile(walls, 0.99)
+    emit("serve_predict_p50", p50 * 1e6,
+         f"p99_us={p99 * 1e6:.1f};rows={REQ_ROWS}")
+
+    # -- refit-behind-traffic: drifted stream, refits included in the wall
+    stream = datasets.make("mnist_like", n_stream, seed=seed + 2,
+                           d=D) + np.float32(0.5)
+    n_refits = 0
+    refit_walls = []
+
+    def _drain():
+        nonlocal n_refits
+        for lo in range(0, n_stream, CHUNK):
+            r, w = timed(svc.ingest, stream[lo:lo + CHUNK])
+            if r.refit is not None:
+                n_refits += 1
+                refit_walls.append(w)
+
+    _, ingest_wall = timed(_drain)
+    ingest_rows_per_s = n_stream / ingest_wall
+    emit("serve_ingest_rows_per_s", ingest_wall / n_stream * 1e6,
+         f"rows_per_s={ingest_rows_per_s:.0f};refits={n_refits}")
+
+    # -- warm vs cold ledger on the same refit sample + seed
+    warm, cold = svc.refit_report_pair()
+    wl, cl = warm.ledger(), cold.ledger()
+    warm_cached_fraction = wl["cached"] / max(1, wl["cached"] + wl["fresh"])
+    # sanity gates: the warm path must actually be warm
+    assert wl["cached"] > 0, "warm refit reported zero cached evals"
+    assert warm.evals_by_phase["build"] == 0, "warm refit ran BUILD"
+    emit("serve_refit_warm_vs_cold", 0.0,
+         f"warm_fresh={wl['fresh']};cold_fresh={cl['fresh']};"
+         f"warm_cached_fraction={warm_cached_fraction:.3f}")
+
+    return {
+        "bench": "serve", "n_fit": int(n_fit), "n_stream": int(n_stream),
+        "k": int(k), "d": int(D), "metric": "l2",
+        "device": jax.default_backend(), "cpu_count": os.cpu_count(),
+        "fit_wall_s": round(fit_wall, 4),
+        "predict": {
+            "request_rows": REQ_ROWS, "n_requests": N_REQ,
+            "p50_ms": round(p50 * 1e3, 4), "p99_ms": round(p99 * 1e3, 4),
+            "rows_per_s": round(REQ_ROWS / p50, 1),
+        },
+        "ingest": {
+            "chunk_rows": CHUNK, "wall_s": round(ingest_wall, 4),
+            "rows_per_s": round(ingest_rows_per_s, 1),
+            "n_refits": int(n_refits),
+            "refit_wall_s_median": round(
+                statistics.median(refit_walls), 4) if refit_walls else None,
+        },
+        "refit_ledger": {
+            "warm": {"loss": round(float(warm.loss), 4),
+                     "fresh": int(wl["fresh"]), "cached": int(wl["cached"]),
+                     "n_swaps": int(warm.n_swaps)},
+            "cold": {"loss": round(float(cold.loss), 4),
+                     "fresh": int(cl["fresh"]), "cached": int(cl["cached"]),
+                     "n_swaps": int(cold.n_swaps)},
+            "warm_cached_fraction": round(warm_cached_fraction, 4),
+            "warm_fresh_savings": round(
+                1.0 - wl["fresh"] / max(1, cl["fresh"]), 4),
+        },
+        "service_stats": svc.stats(),
+    }
+
+
+def write_json(path="BENCH_serve.json", **kw) -> str:
+    payload = sweep(**kw)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    emit("serve_json_written", 0.0, path)
+    return path
+
+
+def run():
+    sweep()
+
+
+if __name__ == "__main__":
+    run()

@@ -12,8 +12,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_reduced
 from repro.models import model as M
-from repro.serve import make_prefill_step
-from repro.serve.serve_step import greedy_decode
+from repro.serve.lm import greedy_decode, make_prefill_step
 from repro.train import synthetic_batch
 
 

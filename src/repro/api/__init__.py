@@ -10,7 +10,8 @@ from repro.core.engine import (available_stats_backends, get_stats_backend,
 from repro.core.report import BatchFitReport, FitReport
 
 from .estimator import KMedoids
-from .predict import PALLAS_METRICS, medoid_distances, resolve_backend
+from .predict import (PALLAS_METRICS, assign_medoids, get_predict_fn,
+                      medoid_distances, resolve_backend)
 from .registry import (available_batch_solvers, available_solvers,
                        default_params, get_batch_solver, get_solver,
                        register_solver, solver_accepts_backend)
@@ -21,8 +22,8 @@ __all__ = [
     "available_solvers", "available_batch_solvers",
     "default_params", "solver_accepts_backend",
     "register_metric", "available_metrics",
-    "resolve_metric", "attach_index", "medoid_distances", "resolve_backend",
-    "PALLAS_METRICS",
+    "resolve_metric", "attach_index", "medoid_distances", "assign_medoids",
+    "get_predict_fn", "resolve_backend", "PALLAS_METRICS",
     "register_stats_backend", "get_stats_backend",
     "available_stats_backends", "resolve_stats_backend",
 ]

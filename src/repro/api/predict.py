@@ -13,12 +13,24 @@ path uses (``repro.core.engine``): ``"pallas"`` is the tiled MXU kernel
 the engine's ``resolve_stats_backend`` — one "Pallas only on TPU" auto
 rule shared by fit and predict, so the policy cannot drift between the
 two surfaces.
+
+Serving hot path: :func:`get_predict_fn` returns a jitted closure cached
+on ``(k, d, metric, backend, rows)``.  jax's jit cache keys on function
+*identity* plus argument shapes — rebuilding the closure per request
+would retrace every call even at identical shapes, so the closure itself
+must be memoised.  Query chunks are padded up to power-of-two row
+buckets (:func:`bucket_rows`) so a stream of ragged request sizes
+touches at most ``log2(chunk)`` compiled variants instead of one per
+distinct size; ``repro.serve.MedoidService`` answers every request
+through these closures.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+import functools
+from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -47,20 +59,90 @@ def resolve_backend(backend: Optional[str], metric: str) -> str:
                          f"{e.args[0] if e.args else e}") from None
 
 
+def bucket_rows(m: int, chunk: int) -> int:
+    """Fixed-shape row bucket for an ``m``-row request: the smallest
+    power of two >= m, clamped to ``chunk``.  Bounded bucket set ⇒
+    bounded retraces."""
+    m = min(max(1, m), chunk)
+    return min(1 << (m - 1).bit_length(), chunk)
+
+
+@functools.lru_cache(maxsize=None)
+def get_predict_fn(k: int, d: int, metric: str, backend: str, rows: int):
+    """Jitted ``([rows, d], [k, d]) -> (dist [rows, k], labels [rows],
+    dmin [rows])`` closure, memoised on its full trace key.
+
+    ``backend`` must be a *resolved* stats-backend name (callers go
+    through :func:`resolve_backend` first) so ``"auto"`` and its
+    resolution never alias to two cache entries.  Pad rows beyond the
+    logical request are computed and discarded by the caller — every
+    registered metric is row-independent, so padding cannot perturb the
+    live rows.
+    """
+    be = get_stats_backend(backend)
+
+    def _fn(xc, med):
+        dmat = be.pairwise(xc, med, metric=metric)
+        labels = jnp.argmin(dmat, axis=1).astype(jnp.int32)
+        return dmat, labels, jnp.min(dmat, axis=1)
+
+    return jax.jit(_fn)
+
+
+def _run_chunks(x, medoid_points, metric: str, bname: str, chunk: int):
+    """Yield ``(lo, m_c, dmat, labels, dmin)`` per padded query chunk."""
+    k, d = int(medoid_points.shape[0]), int(medoid_points.shape[1])
+    x = np.asarray(x, np.float32)
+    m = x.shape[0]
+    lo = 0
+    while lo < m:
+        m_c = min(chunk, m - lo)
+        rows = bucket_rows(m_c, chunk)
+        fn = get_predict_fn(k, d, metric, bname, rows)
+        if m_c == rows:
+            xc = x[lo:lo + m_c]
+        else:
+            xc = np.zeros((rows, d), np.float32)
+            xc[:m_c] = x[lo:lo + m_c]
+        dmat, labels, dmin = fn(jnp.asarray(xc), medoid_points)
+        yield lo, m_c, dmat, labels, dmin
+        lo += m_c
+
+
 def medoid_distances(x: np.ndarray, medoid_points: jnp.ndarray, metric: str,
                      *, backend: Optional[str] = None,
                      chunk: int = DEFAULT_CHUNK) -> np.ndarray:
     """``[m, d]`` queries × ``[k, d]`` fitted medoids → ``[m, k]`` float32.
 
     Chunked over the query axis; each chunk is one dispatch through the
-    resolved stats backend's pairwise path.
+    cached jitted closure for its ``(k, d, metric, backend, rows)`` key.
     """
-    be = get_stats_backend(resolve_backend(backend, metric))
+    bname = resolve_backend(backend, metric)
+    chunk = max(1, int(chunk))
+    out = np.empty((x.shape[0], medoid_points.shape[0]), np.float32)
+    for lo, m_c, dmat, _, _ in _run_chunks(x, medoid_points, metric,
+                                           bname, chunk):
+        out[lo:lo + m_c] = np.asarray(dmat, np.float32)[:m_c]
+    return out
+
+
+def assign_medoids(x: np.ndarray, medoid_points: jnp.ndarray, metric: str,
+                   *, backend: Optional[str] = None,
+                   chunk: int = DEFAULT_CHUNK
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """``[m, d]`` queries → ``(labels [m] int32, dmin [m] float32)``.
+
+    The serving assignment path: label + nearest-medoid distance come out
+    of the same dispatch as the distance block, so the drift monitor's
+    loss samples are free once a request has been answered.
+    """
+    bname = resolve_backend(backend, metric)
     chunk = max(1, int(chunk))
     m = x.shape[0]
-    out = np.empty((m, medoid_points.shape[0]), np.float32)
-    for lo in range(0, m, chunk):
-        xc = jnp.asarray(x[lo:lo + chunk], jnp.float32)
-        out[lo:lo + chunk] = np.asarray(
-            be.pairwise(xc, medoid_points, metric=metric), np.float32)
-    return out
+    labels = np.empty((m,), np.int32)
+    dmin = np.empty((m,), np.float32)
+    for lo, m_c, _, lab_c, dmin_c in _run_chunks(x, medoid_points, metric,
+                                                 bname, chunk):
+        labels[lo:lo + m_c] = np.asarray(lab_c, np.int32)[:m_c]
+        dmin[lo:lo + m_c] = np.asarray(dmin_c, np.float32)[:m_c]
+    return labels, dmin

@@ -179,6 +179,15 @@ def _voronoi(data, k, *, metric, seed, **params):
     return voronoi_iteration(data, k, metric=metric, seed=seed, **params)
 
 
+def _onebatchpam(data, k, *, metric, seed, **params):
+    # OneBatchPAM: k-medoids against ONE fixed reference batch — no bandit
+    # loop, one [n, b] kernel residency.  The latency-floor fast path the
+    # streaming MedoidService refits through; ``init=`` warm-starts SWAP
+    # from current medoids.  Imported lazily like banditpam_dist.
+    from repro.core.onebatch import onebatchpam
+    return onebatchpam(data, k, metric=metric, seed=seed, **params)
+
+
 register_solver("banditpam", _banditpam, accepts_backend=True,
                 batch_fn=_banditpam_batch)
 register_solver("banditpam_pp", _banditpam_pp, accepts_backend=True,
@@ -190,3 +199,4 @@ register_solver("fasterpam", _fasterpam)
 register_solver("clara", _clara)
 register_solver("clarans", _clarans)
 register_solver("voronoi", _voronoi)
+register_solver("onebatchpam", _onebatchpam, accepts_backend=True)

@@ -8,6 +8,7 @@ from .engine import (FitContext, available_stats_backends,
 from .banditpam import BanditPAM, FitResult, medoid_cache, total_loss
 from .distances import (attach_index, available_metrics, get_metric, pairwise,
                         register_metric, resolve_metric)
+from .onebatch import onebatchpam
 from .pam import PAMResult, pam
 from .baselines import BaselineResult, clara, clarans, fasterpam, voronoi_iteration
 from . import datasets
@@ -18,6 +19,7 @@ __all__ = [
     "register_stats_backend", "resolve_stats_backend",
     "medoid_cache", "total_loss", "attach_index", "available_metrics",
     "get_metric", "pairwise", "register_metric", "resolve_metric",
+    "onebatchpam",
     "PAMResult", "pam", "BaselineResult", "clara", "clarans", "fasterpam",
     "voronoi_iteration", "datasets",
 ]

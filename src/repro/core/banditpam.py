@@ -896,9 +896,21 @@ class BanditPAM:
                 accept)
 
     # -- public ----------------------------------------------------------
-    def fit(self, data) -> FitResult:
+    def fit(self, data, warm_start=None) -> FitResult:
+        """Fit medoids; ``warm_start`` (optional ``[k]`` indices) skips
+        BUILD and seeds SWAP from the given medoids.
+
+        The warm path is the serving layer's incremental refit: BUILD's
+        ``n·k + rounds`` evaluations are never paid (the build ledger
+        entry records 0), the context key is still drawn first so a
+        ``reuse="pic"`` ring fills identically to a cold fit, and the
+        BUILD subkeys are simply not consumed — the SWAP chain is
+        deterministic given (seed, warm_start) but intentionally distinct
+        from the cold fit's chain.
+        """
         data = jnp.asarray(data, jnp.float32)
-        if data.shape[0] <= self.k:
+        n = data.shape[0]
+        if n <= self.k:
             raise ValueError("need n > k")
         backend = resolve_stats_backend(self.backend, self.metric)
         key = jax.random.PRNGKey(self.seed)
@@ -906,8 +918,23 @@ class BanditPAM:
                         n_swaps=0, converged=False, distance_evals=0)
         key, ckey = jax.random.split(key)
         ctx = self._make_context(data, ckey, backend, res)
+        if warm_start is not None:
+            ws = np.asarray(warm_start, np.int64).ravel()
+            if ws.shape[0] != self.k or len(set(ws.tolist())) != self.k:
+                raise ValueError(
+                    f"warm_start must be {self.k} distinct medoid "
+                    f"indices, got {ws.tolist()}")
+            if ws.min() < 0 or ws.max() >= n:
+                raise ValueError(f"warm_start indices out of range "
+                                 f"[0, {n})")
+            ctx.warm_medoids = jnp.asarray(ws, jnp.int32)
         t0 = time.perf_counter()
-        medoids, med_mask, key = self._build(data, key, ctx, res)
+        if ctx.warm_medoids is not None:
+            medoids = ctx.warm_medoids
+            med_mask = jnp.zeros((n,), jnp.bool_).at[medoids].set(True)
+            res.evals_by_phase["build"] = 0
+        else:
+            medoids, med_mask, key = self._build(data, key, ctx, res)
         jax.block_until_ready(medoids)
         res.wall_by_phase["build"] = time.perf_counter() - t0
         t0 = time.perf_counter()

@@ -424,6 +424,10 @@ class FitContext:
     #                                        capacity W = cols.shape[1] // B
     dwarm: Optional[jnp.ndarray] = None    # [n, C] warm columns ("warm")
     free_rounds: int = 0                   # static warm-block rounds ("warm")
+    warm_medoids: Optional[jnp.ndarray] = None  # [k] int32 BUILD bypass:
+    #   when set, ``fit`` skips BUILD entirely and SWAP starts from these
+    #   indices (the serving layer's incremental-refit entry; build ledger
+    #   records 0 and the BUILD subkeys are never drawn)
     # -- batched multi-fit fields (leading [batch] axis when batch > 0) --
     batch: int = 0                         # fit count; 0 = single-fit context
     valid: Optional[jnp.ndarray] = None    # [batch, n] bool row-validity

@@ -17,7 +17,7 @@ from repro.configs import get_config, get_reduced
 from repro.distributed import sharding as shrules
 from repro.models import model as M
 from repro.runtime.elastic import build_mesh, plan_remesh
-from repro.serve import make_decode_step, make_prefill_step
+from repro.serve.lm import make_decode_step, make_prefill_step
 from repro.train import synthetic_batch
 
 

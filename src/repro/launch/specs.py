@@ -19,7 +19,7 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import model as M
 from repro.train import OptConfig, init_opt_state
 from repro.train.train_step import make_train_step
-from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.serve.lm import make_decode_step, make_prefill_step
 
 SDS = jax.ShapeDtypeStruct
 

@@ -65,7 +65,15 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
             shardings: Any = None) -> Any:
     """Restore into the structure of `tree_like`; `shardings` may be a
-    matching pytree of NamedShardings (or None for host-local arrays)."""
+    matching pytree of NamedShardings (or None for host-local arrays).
+
+    Leaf dtype discipline: a leaf whose template is a **numpy** array or
+    scalar is returned as numpy with the SAVED bits untouched — host-side
+    state (f64 reservoir keys, i64 counters) must round-trip exactly even
+    though jax's default f32 regime would silently downcast it.  Device
+    templates (jax arrays) keep the historical behaviour: cast to the
+    template dtype on device (or ``device_put`` onto the given sharding).
+    """
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -83,6 +91,8 @@ def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
         arr = np.load(os.path.join(path, f"arr_{i}.npy"))
         if sh is not None:
             out.append(jax.device_put(arr, sh))
+        elif isinstance(ref, (np.ndarray, np.generic)):
+            out.append(arr.astype(ref.dtype, copy=False))
         else:
             out.append(jnp.asarray(arr, dtype=ref.dtype))
     return jax.tree_util.tree_unflatten(treedef, out), meta

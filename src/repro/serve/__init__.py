@@ -1,3 +1,15 @@
-from .serve_step import make_decode_step, make_prefill_step
+"""``repro.serve`` — the streaming k-medoids serving layer.
 
-__all__ = ["make_decode_step", "make_prefill_step"]
+Fronts :class:`MedoidService` (device-resident medoids, cached jitted
+predict closures, CLARA-style weighted reservoir, drift-triggered
+warm-start refits) plus its building blocks.  The dormant LM
+prefill/decode scaffolding that used to live here is quarantined in
+``repro.serve.lm`` — import it explicitly; it is intentionally NOT
+re-exported from the package front.
+"""
+
+from .drift import DriftMonitor
+from .reservoir import Reservoir
+from .service import IngestResult, MedoidService
+
+__all__ = ["DriftMonitor", "IngestResult", "MedoidService", "Reservoir"]

@@ -1,7 +1,15 @@
-"""Serving step factories: prefill (prompt -> caches + first logits) and
-single-token decode against the sharded caches.  Batched request serving
-drives these from examples/serve_lm.py; the dry-run lowers them for the
-decode_32k / long_500k cells."""
+"""LM serving step factories (quarantined scaffolding).
+
+Prefill (prompt -> caches + first logits) and single-token decode against
+the sharded caches.  Batched request serving drives these from
+examples/serve_lm.py; the dry-run lowers them for the decode_32k /
+long_500k cells.
+
+This module is the dormant language-model side of ``repro.serve`` and is
+deliberately kept OUT of the package front: ``repro.serve`` fronts the
+streaming k-medoids :class:`~repro.serve.service.MedoidService`; LM
+consumers import ``repro.serve.lm`` explicitly (formerly
+``repro.serve.serve_step``)."""
 from __future__ import annotations
 
 from typing import Optional

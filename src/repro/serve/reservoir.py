@@ -1,0 +1,155 @@
+"""CLARA-style weighted reservoir over the ingest stream.
+
+The serving layer cannot keep every point it has ever seen, but a refit
+needs a sample that (a) fits in one solver call and (b) over-represents
+the points the current medoids serve BADLY — exactly the points a drift
+refit must fix.  Kaufman & Rousseeuw's CLARA grounds the shape (PAM-class
+solve on a bounded subsample); the sampling rule is A-Res weighted
+reservoir sampling (Efraimidis & Spirakis 2006): each stream point i with
+weight ``w_i > 0`` draws ``u_i ~ U(0,1)`` and gets the key
+``r_i = u_i^(1/w_i)``; the reservoir keeps the ``capacity`` largest keys.
+The kept set is then a weighted sample without replacement of *everything
+ever offered*, regardless of stream order or chunking.
+
+Two determinism properties the service's snapshot/resume contract leans
+on:
+
+* ``u_i`` is derived by folding the GLOBAL stream index ``i`` into a
+  fixed PRNG key (threefry ``fold_in``, same construction as the batched
+  engine's per-lane chains) — NOT by advancing a stateful generator.
+  Splitting one 1000-point ingest into ten 100-point calls produces
+  bit-identical reservoirs, and a restored service replays the exact
+  keys the original would have drawn.
+* The merge is a host-side f64 lexsort on ``(key desc, stream index
+  asc)`` — a total order, so ties cannot make two replicas diverge.
+
+State is a flat dict of numpy arrays (see :meth:`state`) that rides
+``runtime/checkpoint.py`` untouched.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Reservoir"]
+
+
+@jax.jit
+def _stream_uniforms(key, idx):
+    """``u_i ~ U(0,1)`` for global stream indices ``idx`` — one threefry
+    fold per index, so the draw depends only on (key, i)."""
+    return jax.vmap(
+        lambda i: jax.random.uniform(jax.random.fold_in(key, i)))(idx)
+
+
+@functools.lru_cache(maxsize=None)
+def _uniform_bucket(m: int) -> int:
+    """Pad index batches to power-of-two buckets: bounded jit variants of
+    ``_stream_uniforms`` over a ragged ingest stream."""
+    return 1 << (max(1, m) - 1).bit_length()
+
+
+class Reservoir:
+    """Bounded weighted sample of the ingest stream (A-Res keys).
+
+    Args:
+      capacity: maximum points held.
+      d: feature dimension.
+      seed: base PRNG key for the per-index uniforms.
+    """
+
+    def __init__(self, capacity: int, d: int, seed: int = 0):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.d = int(d)
+        self.seed = int(seed)
+        self._key = jax.random.PRNGKey(self.seed)
+        self.pts = np.zeros((self.capacity, self.d), np.float32)
+        self.keys = np.full((self.capacity,), -np.inf, np.float64)
+        self.sidx = np.full((self.capacity,), -1, np.int64)
+        self.filled = 0
+        self.seen = 0       # total stream points ever offered
+
+    # -- ingest ----------------------------------------------------------
+    def offer(self, points: np.ndarray, weights: Optional[np.ndarray] = None
+              ) -> None:
+        """Offer ``[m, d]`` points with optional positive weights.
+
+        Stream indices are assigned internally (``seen .. seen+m``), so
+        callers only ever append — the chunking of a stream into offer()
+        calls is not observable in the final reservoir.
+        """
+        pts = np.asarray(points, np.float32)
+        if pts.ndim != 2 or pts.shape[1] != self.d:
+            raise ValueError(f"expected [m, {self.d}] points, "
+                             f"got {pts.shape}")
+        m = pts.shape[0]
+        if m == 0:
+            return
+        if weights is None:
+            w = np.ones((m,), np.float64)
+        else:
+            w = np.asarray(weights, np.float64).ravel()
+            if w.shape[0] != m:
+                raise ValueError("weights/points length mismatch")
+            if (w <= 0).any():
+                raise ValueError("weights must be positive")
+        idx = self.seen + np.arange(m, dtype=np.int64)
+        rows = _uniform_bucket(m)
+        idx_pad = np.zeros((rows,), np.int64)
+        idx_pad[:m] = idx
+        u = np.asarray(_stream_uniforms(self._key, jnp.asarray(idx_pad)),
+                       np.float64)[:m]
+        # A-Res key in f64 on host; clamp u away from 0 so log is finite.
+        r = np.exp(np.log(np.maximum(u, 1e-300)) / w)
+
+        cat_pts = np.concatenate([self.pts[:self.filled], pts])
+        cat_keys = np.concatenate([self.keys[:self.filled], r])
+        cat_sidx = np.concatenate([self.sidx[:self.filled], idx])
+        # Total order: key desc, then stream index asc — ties cannot
+        # reorder between replicas.
+        order = np.lexsort((cat_sidx, -cat_keys))[:self.capacity]
+        keep = len(order)
+        self.pts[:keep] = cat_pts[order]
+        self.keys[:keep] = cat_keys[order]
+        self.sidx[:keep] = cat_sidx[order]
+        self.keys[keep:] = -np.inf
+        self.sidx[keep:] = -1
+        self.filled = keep
+        self.seen += m
+
+    # -- views -----------------------------------------------------------
+    @property
+    def points(self) -> np.ndarray:
+        """``[filled, d]`` view of the held points."""
+        return self.pts[:self.filled]
+
+    def __len__(self) -> int:
+        return self.filled
+
+    # -- checkpoint state ------------------------------------------------
+    def state(self) -> dict:
+        """Flat numpy pytree for ``runtime.checkpoint`` (bit-exact:
+        f64 keys and i64 counters round-trip as numpy leaves)."""
+        return {"pts": self.pts.copy(), "keys": self.keys.copy(),
+                "sidx": self.sidx.copy(),
+                "filled": np.int64(self.filled),
+                "seen": np.int64(self.seen)}
+
+    def load_state(self, state: dict) -> None:
+        pts = np.asarray(state["pts"], np.float32)
+        if pts.shape != (self.capacity, self.d):
+            raise ValueError(f"reservoir shape mismatch: snapshot "
+                             f"{pts.shape} vs configured "
+                             f"{(self.capacity, self.d)}")
+        self.pts = pts.copy()
+        self.keys = np.asarray(state["keys"], np.float64).copy()
+        self.sidx = np.asarray(state["sidx"], np.int64).copy()
+        self.filled = int(state["filled"])
+        self.seen = int(state["seen"])

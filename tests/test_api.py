@@ -10,8 +10,8 @@ from repro.api import (KMedoids, available_metrics, available_solvers,
                        register_solver)
 from repro.api import registry as api_registry
 from repro.core import (BanditPAM, FitReport, clara, clarans, datasets,
-                        fasterpam, pairwise, pam, resolve_metric, total_loss,
-                        voronoi_iteration)
+                        fasterpam, onebatchpam, pairwise, pam,
+                        resolve_metric, total_loss, voronoi_iteration)
 from repro.core.distributed import DistributedBanditPAM, default_mesh
 
 N, K = 300, 3
@@ -33,6 +33,8 @@ LEGACY = {
                 lambda d: clarans(d, K, metric="l2", seed=0,
                                   max_neighbors=60)),
     "voronoi": ({}, lambda d: voronoi_iteration(d, K, metric="l2", seed=0)),
+    # One fixed reference batch, no bandit loop (the serving fast path).
+    "onebatchpam": ({}, lambda d: onebatchpam(d, K, metric="l2", seed=0)),
 }
 
 

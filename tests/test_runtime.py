@@ -1,5 +1,13 @@
 """Fault-tolerance substrate: checkpoint/restore, resume, preemption,
-straggler detection, elastic re-mesh planning."""
+straggler detection, elastic re-mesh planning, and the serving layer's
+service-state checkpoints (numpy-leaf exactness + mesh restore)."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -32,6 +40,90 @@ def test_checkpoint_latest_and_structure_guard(tmp_path):
     assert ckpt.latest_step(str(tmp_path)) == 5
     with pytest.raises(AssertionError):
         ckpt.restore(str(tmp_path), {"different": jnp.zeros(3)})
+
+
+def test_checkpoint_numpy_leaves_keep_dtype_and_bits(tmp_path):
+    """Host-state leaves (f64 reservoir keys, i64 counters) must come
+    back as numpy with the saved bits — not silently downcast to the
+    jax f32 regime like device leaves are."""
+    s = {"keys": np.array([1.0 + 1e-12, -np.inf], np.float64),
+         "count": np.int64(2**40 + 7),
+         "dev": jnp.arange(4, dtype=jnp.float32)}
+    ckpt.save(str(tmp_path), 1, s)
+    restored, _ = ckpt.restore(str(tmp_path), s)
+    assert isinstance(restored["keys"], np.ndarray)
+    assert restored["keys"].dtype == np.float64
+    assert restored["keys"].tobytes() == s["keys"].tobytes()
+    assert int(restored["count"]) == 2**40 + 7
+    assert isinstance(restored["dev"], jax.Array)
+
+
+def test_service_state_checkpoint_roundtrip(tmp_path):
+    """The MedoidService state tree — medoids, reservoir (pts + f64 A-Res
+    keys + stream position = RNG chain position), drift counters —
+    round-trips bit-exactly through runtime.checkpoint."""
+    from repro.core import datasets
+    from repro.serve import MedoidService
+
+    X = datasets.mnist_like(300, seed=0, d=16)
+    svc = MedoidService(3, "l2", reservoir_size=64, drift_window=50,
+                        request_chunk=128, seed=0).fit(X)
+    svc.ingest(datasets.mnist_like(80, seed=1, d=16) + 0.2)
+    path = svc.snapshot(str(tmp_path))
+    assert os.path.isdir(path)
+    svc2 = MedoidService.restore(str(tmp_path))
+    a, b = svc._state_tree(), svc2._state_tree()
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        na, nb = np.asarray(la), np.asarray(lb)
+        assert na.dtype == nb.dtype
+        assert na.tobytes() == nb.tobytes()
+    assert svc2.config() == svc.config()
+
+
+_MESH_RESTORE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, sys, jax, numpy as np
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.core import datasets
+    from repro.serve import MedoidService
+
+    ckpt_dir = sys.argv[1]
+    X = datasets.mnist_like(300, seed=0, d=16)
+    svc = MedoidService(4, "l2", reservoir_size=64, drift_window=50,
+                        request_chunk=128, seed=0).fit(X)
+    svc.ingest(datasets.mnist_like(80, seed=1, d=16) + 0.2)
+    svc.snapshot(ckpt_dir)
+    q = datasets.mnist_like(32, seed=2, d=16)
+    want = svc.predict(q)
+
+    # restore onto a DIFFERENT mesh: medoids sharded over 4 devices
+    mesh = Mesh(np.asarray(jax.devices()[:4]), ("data",))
+    shardings = {"medoid_points": NamedSharding(mesh, P("data", None)),
+                 "reservoir": {k: None for k in
+                               ("pts", "keys", "sidx", "filled", "seen")},
+                 "drift": {k: None for k in ("baseline", "sum", "count")},
+                 "counters": {k: None for k in
+                              ("n_refits", "fresh", "cached")}}
+    svc2 = MedoidService.restore(ckpt_dir, shardings=shardings)
+    got = svc2.predict(q)
+    sharded = len(svc2.medoid_points.sharding.device_set) == 4
+    print(json.dumps({"match": bool(np.array_equal(want, got)),
+                      "sharded": sharded,
+                      "stats_match": svc.stats() == svc2.stats()}))
+""")
+
+
+def test_service_restore_onto_different_mesh(tmp_path):
+    out = subprocess.run(
+        [sys.executable, "-c", _MESH_RESTORE, str(tmp_path)],
+        capture_output=True, text=True,
+        cwd=str(pathlib.Path(__file__).resolve().parent.parent),
+        env=dict(os.environ, PYTHONPATH="src"), timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res == {"match": True, "sharded": True, "stats_match": True}
 
 
 def test_fault_loop_resumes_after_transient_failure(tmp_path):

@@ -1,0 +1,314 @@
+"""The streaming serving layer: MedoidService end-to-end (fit -> serve ->
+drift -> warm refit), ledger-verified warm-vs-cold refit economics,
+bit-identical snapshot/resume, reservoir/drift determinism, the cached
+predict closures, and the onebatchpam solver."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import (available_solvers, get_predict_fn, medoid_distances,
+                       solver_accepts_backend, KMedoids)
+from repro.api.predict import assign_medoids, bucket_rows
+from repro.core import BanditPAM, datasets, onebatchpam, pairwise, pam
+from repro.serve import DriftMonitor, IngestResult, MedoidService, Reservoir
+
+K, D = 5, 20
+
+
+def _base(n=500, seed=0):
+    return datasets.mnist_like(n, seed=seed, d=D)
+
+
+def _drifted(n, seed, shift=0.5):
+    return datasets.mnist_like(n, seed=seed, d=D) + np.float32(shift)
+
+
+def _service(seed=0, **kw):
+    kw.setdefault("reservoir_size", 256)
+    kw.setdefault("drift_threshold", 0.2)
+    kw.setdefault("drift_window", 100)
+    kw.setdefault("request_chunk", 256)
+    return MedoidService(K, "l2", seed=seed, **kw)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end acceptance: fit -> serve -> drift -> warm refit beats cold
+# ---------------------------------------------------------------------------
+
+def test_service_end_to_end_warm_refit_beats_cold():
+    X = _base()
+    svc = _service().fit(X)
+    base_stats = svc.stats()
+    assert base_stats["n_refits"] == 0 and base_stats["seen"] == 500
+
+    # served predictions agree with the offline predict path
+    q = _base(64, seed=9)
+    ref_lab, _ = assign_medoids(q, svc.medoid_points, "l2", backend="jnp")
+    assert np.array_equal(svc.predict(q), ref_lab)
+
+    # ingest a drifted stream until the monitor trips a warm refit
+    stream = _drifted(600, seed=3)
+    reports = []
+    for lo in range(0, 600, 100):
+        r = svc.ingest(stream[lo:lo + 100])
+        assert isinstance(r, IngestResult)
+        if r.refit is not None:
+            reports.append(r.refit)
+    assert reports, "drifted stream never triggered a refit"
+    assert svc.stats()["n_refits"] == len(reports)
+    # every auto-refit went through the warm path: BUILD ledger is zero
+    for rep in reports:
+        assert rep.evals_by_phase["build"] == 0
+        assert rep.ledger()["cached"] > 0
+
+    # ledger-verified economics on the SAME refit sample + seed:
+    # warm reaches loss <= cold with strictly fewer fresh evals
+    warm, cold = svc.refit_report_pair()
+    assert warm.loss <= cold.loss + 1e-5 * abs(cold.loss)
+    assert warm.ledger()["fresh"] < cold.ledger()["fresh"]
+    assert warm.ledger()["cached"] > 0
+    assert warm.evals_by_phase["build"] == 0
+    assert cold.evals_by_phase["build"] > 0
+
+
+def test_service_snapshot_resume_bit_identical(tmp_path):
+    """Snapshot mid-stream; the resumed service must replay the remaining
+    stream to the SAME refits, medoids (bitwise) and ledger."""
+    X = _base()
+    svc = _service().fit(X)
+    pre = _drifted(200, seed=5, shift=0.3)
+    for lo in range(0, 200, 100):
+        svc.ingest(pre[lo:lo + 100])
+
+    svc.snapshot(str(tmp_path))
+    svc2 = MedoidService.restore(str(tmp_path))
+    assert np.asarray(svc.medoid_points).tobytes() == \
+        np.asarray(svc2.medoid_points).tobytes()
+    assert svc.stats() == svc2.stats()
+
+    post = _drifted(400, seed=7, shift=0.8)
+    n_refits = 0
+    for lo in range(0, 400, 80):
+        a = svc.ingest(post[lo:lo + 80])
+        b = svc2.ingest(post[lo:lo + 80])
+        assert np.array_equal(a.labels, b.labels)
+        assert a.dmin.tobytes() == b.dmin.tobytes()
+        assert (a.refit is None) == (b.refit is None)
+        if a.refit is not None:
+            n_refits += 1
+            # same refit sample => same medoid indices and ledger
+            assert np.array_equal(a.refit.medoids, b.refit.medoids)
+            assert a.refit.ledger() == b.refit.ledger()
+    assert n_refits >= 1, "resumed segment never refitted"
+    assert np.asarray(svc.medoid_points).tobytes() == \
+        np.asarray(svc2.medoid_points).tobytes()
+    assert svc.stats() == svc2.stats()
+    # reservoir state replayed exactly (A-Res keys are f64-exact)
+    assert svc.reservoir.keys.tobytes() == svc2.reservoir.keys.tobytes()
+    assert np.array_equal(svc.reservoir.sidx, svc2.reservoir.sidx)
+
+
+def test_drift_trigger_determinism():
+    """Two identical services on the same stream refit at the same chunk
+    on the same reservoir points and land on identical medoids."""
+    X = _base()
+    a = _service().fit(X)
+    b = _service().fit(X)
+    stream = _drifted(600, seed=3)
+    trip_a, trip_b = [], []
+    for lo in range(0, 600, 100):
+        ra = a.ingest(stream[lo:lo + 100])
+        rb = b.ingest(stream[lo:lo + 100])
+        if ra.refit is not None:
+            trip_a.append(lo)
+        if rb.refit is not None:
+            trip_b.append(lo)
+    assert trip_a and trip_a == trip_b
+    assert np.array_equal(a.reservoir.sidx, b.reservoir.sidx)
+    assert np.asarray(a.medoid_points).tobytes() == \
+        np.asarray(b.medoid_points).tobytes()
+
+
+def test_service_onebatch_refit_path():
+    X = _base()
+    svc = _service(refit="onebatch",
+                   refit_params={"ref_size": 128}).fit(X)
+    stream = _drifted(600, seed=3)
+    reports = [r.refit for lo in range(0, 600, 100)
+               for r in [svc.ingest(stream[lo:lo + 100])]
+               if r.refit is not None]
+    assert reports
+    for rep in reports:
+        # the fixed-batch ledger: one [n, b] block + the exact final pass
+        assert set(rep.evals_by_phase) == {"ref_batch", "final_loss"}
+
+
+def test_service_validation():
+    with pytest.raises(ValueError):
+        MedoidService(0, "l2")
+    with pytest.raises(ValueError):
+        MedoidService(3, "precomputed")
+    with pytest.raises(ValueError):
+        MedoidService(3, "l2", refit="nope")
+    with pytest.raises(ValueError):
+        MedoidService(3, "l2", reservoir_weights="nope")
+    svc = MedoidService(3, "l2")
+    with pytest.raises(RuntimeError):
+        svc.predict(np.zeros((4, D), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# reservoir + drift units
+# ---------------------------------------------------------------------------
+
+def test_reservoir_chunking_invariance():
+    pts = _base(300, seed=1)
+    w = np.abs(pts[:, 0].astype(np.float64)) + 0.1
+    r1 = Reservoir(64, D, seed=0)
+    r1.offer(pts, w)
+    r2 = Reservoir(64, D, seed=0)
+    for lo in range(0, 300, 37):                  # ragged chunking
+        r2.offer(pts[lo:lo + 37], w[lo:lo + 37])
+    assert r1.seen == r2.seen == 300
+    assert np.array_equal(r1.sidx, r2.sidx)
+    assert r1.keys.tobytes() == r2.keys.tobytes()
+    assert np.array_equal(r1.points, r2.points)
+
+
+def test_reservoir_weighting_biases_survival():
+    """Heavily-weighted points must dominate the kept set."""
+    pts = np.arange(2000, dtype=np.float32)[:, None] * np.ones((1, D),
+                                                               np.float32)
+    w = np.where(np.arange(2000) < 1000, 100.0, 0.01)
+    r = Reservoir(200, D, seed=0)
+    r.offer(pts, w)
+    heavy = (r.sidx[:r.filled] < 1000).mean()
+    assert heavy > 0.95
+
+
+def test_reservoir_validation():
+    r = Reservoir(8, D, seed=0)
+    with pytest.raises(ValueError):
+        r.offer(np.zeros((3, D + 1), np.float32))
+    with pytest.raises(ValueError):
+        r.offer(np.zeros((3, D), np.float32), np.array([1.0, -1.0, 2.0]))
+    r.offer(np.zeros((0, D), np.float32))          # empty offer is a no-op
+    assert r.seen == 0 and len(r) == 0
+
+
+def test_drift_monitor_rule():
+    m = DriftMonitor(threshold=0.5, window=10)
+    m.reset(1.0)
+    m.update(np.full(9, 10.0))
+    assert not m.drifted                           # below window
+    m.update(np.full(1, 10.0))
+    assert m.drifted                               # mean 10 > 1.5 * 1.0
+    m.reset(10.0)
+    m.update(np.full(20, 10.0))
+    assert not m.drifted                           # at baseline
+    unarmed = DriftMonitor(threshold=0.0, window=1)
+    unarmed.update(np.full(5, 1e9))
+    assert not unarmed.drifted                     # never reset => inf mu0
+
+
+# ---------------------------------------------------------------------------
+# predict closures (the no-retrace hot path)
+# ---------------------------------------------------------------------------
+
+def test_predict_closure_is_cached_and_bucketed():
+    assert bucket_rows(1, 8192) == 1
+    assert bucket_rows(3, 8192) == 4
+    assert bucket_rows(4096, 8192) == 4096
+    assert bucket_rows(5000, 8192) == 8192
+    assert bucket_rows(10**6, 8192) == 8192
+    f1 = get_predict_fn(K, D, "l2", "jnp", 256)
+    f2 = get_predict_fn(K, D, "l2", "jnp", 256)
+    assert f1 is f2                                # memoised => no retrace
+    assert f1 is not get_predict_fn(K, D, "l2", "jnp", 512)
+
+
+def test_predict_paths_match_reference():
+    X = _base(200, seed=2)
+    med = jnp.asarray(X[:K])
+    ref = np.asarray(pairwise(jnp.asarray(X), med, metric="l2"))
+    # ragged sizes exercise the padding path
+    for m in (1, 7, 200):
+        got = medoid_distances(X[:m], med, "l2", backend="jnp", chunk=64)
+        np.testing.assert_allclose(got, ref[:m], rtol=1e-6, atol=1e-6)
+    labels, dmin = assign_medoids(X, med, "l2", backend="jnp", chunk=64)
+    assert np.array_equal(labels, ref.argmin(axis=1))
+    np.testing.assert_allclose(dmin, ref.min(axis=1), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# onebatchpam solver
+# ---------------------------------------------------------------------------
+
+def test_onebatchpam_tracks_pam_on_full_batch():
+    """With ref_size = n the batch objective IS the true objective: the
+    solver must match exact PAM's loss closely."""
+    X = _base(220, seed=4)
+    p = pam(X, K, metric="l2")
+    r = onebatchpam(X, K, metric="l2", seed=0, ref_size=220)
+    assert r.loss <= p.loss * 1.05
+    assert r.converged
+    assert r.distance_evals == 220 * 220 + 220 * K
+    assert r.ledger()["cached"] == 0
+
+
+def test_onebatchpam_warm_init_and_validation():
+    X = _base(220, seed=4)
+    r = onebatchpam(X, K, metric="l2", seed=0)
+    rw = onebatchpam(X, K, metric="l2", seed=0, init=r.medoids)
+    # warm-starting from the solver's own optimum must keep its loss
+    assert rw.loss <= r.loss + 1e-5 * abs(r.loss)
+    with pytest.raises(ValueError):
+        onebatchpam(X, K, metric="l2", init=[0, 1])           # wrong k
+    with pytest.raises(ValueError):
+        onebatchpam(X, K, metric="l2", init=[0, 0, 1, 2, 3])  # duplicate
+    with pytest.raises(ValueError):
+        onebatchpam(X, K, metric="l2", init=[0, 1, 2, 3, 900])
+    with pytest.raises(ValueError):
+        onebatchpam(X[:K], K, metric="l2")                    # n <= k
+
+
+def test_onebatchpam_registered_on_facade():
+    assert "onebatchpam" in available_solvers()
+    assert solver_accepts_backend("onebatchpam")
+    X = _base(220, seed=4)
+    est = KMedoids(K, solver="onebatchpam", metric="l2", seed=0,
+                   ref_size=128).fit(X)
+    legacy = onebatchpam(X, K, metric="l2", seed=0, ref_size=128)
+    assert np.array_equal(np.sort(est.medoids_),
+                          np.sort(np.asarray(legacy.medoids)))
+    assert est.report_.distance_evals == legacy.distance_evals
+
+
+def test_banditpam_warm_start_contract():
+    X = _base(300, seed=6)
+    cold = BanditPAM(K, reuse="pic", seed=0).fit(X)
+    warm = BanditPAM(K, reuse="pic", seed=0).fit(X, warm_start=cold.medoids)
+    # warm-starting from the cold optimum: no BUILD evals, loss kept
+    assert warm.evals_by_phase["build"] == 0
+    assert warm.loss <= cold.loss + 1e-5 * abs(cold.loss)
+    assert warm.distance_evals < cold.distance_evals
+    with pytest.raises(ValueError):
+        BanditPAM(K, seed=0).fit(X, warm_start=[0, 1, 2])
+    with pytest.raises(ValueError):
+        BanditPAM(K, seed=0).fit(X, warm_start=[0, 0, 1, 2, 3])
+    with pytest.raises(ValueError):
+        BanditPAM(K, seed=0).fit(X, warm_start=[0, 1, 2, 3, 300])
+
+
+# ---------------------------------------------------------------------------
+# package front
+# ---------------------------------------------------------------------------
+
+def test_serve_package_fronts_medoid_service():
+    import repro.serve as serve
+    assert serve.__all__ == ["DriftMonitor", "IngestResult",
+                             "MedoidService", "Reservoir"]
+    # the LM scaffolding is quarantined but importable explicitly
+    from repro.serve.lm import make_decode_step, make_prefill_step  # noqa
+    assert not hasattr(serve, "make_prefill_step")
