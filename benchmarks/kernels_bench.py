@@ -59,6 +59,23 @@ def run():
     emit("kernel_build_g_maxerr", 0.0, f"{err:.2e}")
     assert err < 5e-2
 
+    # streaming megakernel: same stats accumulated over a reference WALK
+    # (b unbounded) instead of a resident batch — validity + wall here,
+    # the HBM-traffic argument lives in benchmarks/megakernel_bench.py
+    t_stream = _time(lambda: ops.stream_build_g_stats(
+        x[:256], x, jnp.broadcast_to(dn[0], (n,)), metric="l2",
+        interpret=True)[0])
+    emit("kernel_stream_build_g_pallas_interpret", t_stream * 1e6,
+         f"m=256;r={n};d={d} (reference walk, correctness-mode)")
+    s_s, _, _ = ops.stream_build_g_stats(
+        x[:256], x, jnp.broadcast_to(dn[0], (n,)), metric="l2",
+        interpret=True)
+    s_o, _ = ref.build_g_ref(x[:256], x, jnp.broadcast_to(dn[0], (n,)),
+                             jnp.ones((n,), jnp.float32), "l2")
+    err_s = float(jnp.max(jnp.abs(s_s - s_o)))
+    emit("kernel_stream_build_g_maxerr", 0.0, f"{err_s:.2e}")
+    assert err_s < 5e-2
+
 
 if __name__ == "__main__":
     run()

@@ -1,0 +1,187 @@
+"""Streaming g-stats megakernel benchmark (docs/design.md #8).
+
+Three measurement families, written to ``BENCH_megakernel.json`` for the
+CI artifact:
+
+* ``wall`` — streaming vs materialised walls for the loss / top-2 /
+  exact-fallback dispatches on the jnp lane (the CPU-honest comparison;
+  the Pallas lane is interpret-mode here and is opt-in via
+  ``REPRO_BENCH_PALLAS=1``, timed for validity rather than speed).
+* ``temp_bytes`` — compiled peak-temp deltas from
+  ``jit(...).lower().compile().memory_analysis()``: the streaming forms
+  must not hold the O(n·k) / O(n·chunk) block the materialised graphs
+  carry.
+* ``intensity`` — analytic arithmetic-intensity deltas from
+  ``benchmarks.roofline.gstats_intensity`` at serving/fit shapes: the
+  fused walk's FLOP/byte gain is what the TPU roofline converts into
+  wall-clock once the dispatch is memory-bound.
+
+The tile-tuner sweep at the end seeds ``repro.core.tuning``'s measured
+ledger (``candidates()`` → ``observe()``) and records which config won,
+so a serving process can replay the same warmup.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, tuning
+from repro.core.distances import get_metric
+
+from .common import FULL, emit
+from .roofline import gstats_intensity
+
+
+def _time(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))            # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def _temp_bytes(fn, *specs):
+    ma = jax.jit(fn).lower(*specs).compile().memory_analysis()
+    return None if ma is None else int(ma.temp_size_in_bytes)
+
+
+def _mat_loss(metric):
+    def f(data, medoids):
+        dmat = get_metric(metric)(data, data[medoids])
+        return jnp.sum(jnp.min(dmat, axis=1))
+    return f
+
+
+def _mat_cache(metric):
+    def f(data, medoids):
+        dmat = get_metric(metric)(data, data[medoids])
+        assign = jnp.argmin(dmat, axis=1).astype(jnp.int32)
+        d1 = jnp.min(dmat, axis=1)
+        dmat2 = dmat.at[jnp.arange(dmat.shape[0]), assign].set(jnp.inf)
+        return d1, jnp.min(dmat2, axis=1), assign
+    return f
+
+
+def _chunked_build(be, metric, n):
+    """The pre-streaming exact-fallback graph (scan with a resident
+    [n, chunk] block) — the baseline the megakernel replaces."""
+    def f(data, dnear):
+        idx_np, w_np = engine._ref_chunks(n, engine._EXACT_CHUNK)
+        idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
+
+        def body(acc, iw):
+            i, w_i = iw
+            dxy = be.pairwise(data, data[i], metric=metric)
+            s, _, _ = be.build_stats_from_d(dxy, dnear[i], w_i, None)
+            return acc + s, None
+
+        sums, _ = jax.lax.scan(body, jnp.zeros((n,), jnp.float32),
+                               (idx, w))
+        return sums / n
+    return f
+
+
+def sweep(metric: str = "l2") -> dict:
+    n, k = (20_000, 64) if FULL else (4_000, 32)
+    d = 32
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    med = jnp.asarray(rng.choice(n, k, replace=False).astype(np.int32))
+    dnear = jnp.asarray(rng.uniform(0.5, 2.0, n).astype(np.float32))
+    be = engine.get_stats_backend("jnp")
+    payload = {"shape": {"n": n, "d": d, "k": k, "metric": metric},
+               "wall": {}, "temp_bytes": {}, "intensity": {}, "tuner": {}}
+
+    # -- walls: streaming vs materialised ------------------------------
+    pairs = {
+        "loss": (jax.jit(functools.partial(engine.total_loss,
+                                           metric=metric)),
+                 jax.jit(_mat_loss(metric)), (x, med)),
+        "top2": (jax.jit(functools.partial(engine.medoid_cache,
+                                           metric=metric)),
+                 jax.jit(_mat_cache(metric)), (x, med)),
+        "exact_build": (jax.jit(lambda a, b: engine.exact_build_means(
+                            be, a, b, metric=metric)),
+                        jax.jit(_chunked_build(be, metric, n)), (x, dnear)),
+    }
+    for name, (stream_fn, mat_fn, args) in pairs.items():
+        t_s = _time(stream_fn, *args)
+        t_m = _time(mat_fn, *args)
+        payload["wall"][name] = {"stream_s": t_s, "materialised_s": t_m,
+                                 "speedup": t_m / t_s}
+        emit(f"megakernel_{name}_stream", t_s * 1e6,
+             f"n={n};k={k};mat_us={t_m * 1e6:.1f};x{t_m / t_s:.2f}")
+
+    # -- compiled temp deltas ------------------------------------------
+    xs = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    ms = jax.ShapeDtypeStruct((k,), jnp.int32)
+    ds = jax.ShapeDtypeStruct((n,), jnp.float32)
+    temp_specs = {
+        "loss": (functools.partial(engine.total_loss, metric=metric),
+                 _mat_loss(metric), (xs, ms)),
+        "top2": (functools.partial(engine.medoid_cache, metric=metric),
+                 _mat_cache(metric), (xs, ms)),
+        "exact_build": (lambda a, b: engine.exact_build_means(
+                            be, a, b, metric=metric),
+                        _chunked_build(be, metric, n), (xs, ds)),
+    }
+    for name, (stream_fn, mat_fn, specs) in temp_specs.items():
+        b_s = _temp_bytes(stream_fn, *specs)
+        b_m = _temp_bytes(mat_fn, *specs)
+        payload["temp_bytes"][name] = {"stream": b_s, "materialised": b_m}
+        if b_s and b_m:
+            emit(f"megakernel_{name}_temp", 0.0,
+                 f"stream={b_s};materialised={b_m};x{b_m / b_s:.1f}")
+
+    # -- arithmetic-intensity deltas (roofline model) ------------------
+    for label, (m_, n_, k_) in {
+        "exact_build_1e6": (1_000_000, 1_000_000, 1),
+        "swap_round": (100_000, 512, 8),
+        "serve_top2_1e6": (1_000_000, 8, 8),
+    }.items():
+        payload["intensity"][label] = gstats_intensity(m_, n_, d=128, k=k_)
+        g = payload["intensity"][label]["intensity_gain"]
+        emit(f"megakernel_intensity_{label}", 0.0, f"gain=x{g:.1f}")
+
+    # -- tile-tuner sweep (seeds the measured ledger) ------------------
+    tuning.clear_ledger()
+    for cfg in tuning.candidates(n, d, k, backend="jnp"):
+        t = _time(jax.jit(functools.partial(engine.total_loss,
+                                            metric=metric, tile=cfg.tm)),
+                  x, med)
+        tuning.observe(n, d, k, cfg, {"loss": t}, backend="jnp")
+        payload["tuner"][f"tm{cfg.tm}"] = t
+    best = tuning.resolve_tile_config(n, d, k, backend="jnp")
+    payload["tuner"]["resolved_tm"] = best.tm
+    emit("megakernel_tuner_resolved", 0.0,
+         f"tm={best.tm};tb={best.tb};candidates={len(payload['tuner']) - 1}")
+
+    if os.environ.get("REPRO_BENCH_PALLAS") == "1":
+        from repro.kernels import ops
+        t = _time(functools.partial(ops.stream_build_g_stats, metric=metric,
+                                    interpret=True), x[:256], x, dnear)
+        payload["wall"]["pallas_stream_build_interpret"] = t
+        emit("megakernel_pallas_interpret", t * 1e6, f"n={n}")
+    return payload
+
+
+def write_json(path="BENCH_megakernel.json", **kw) -> str:
+    payload = sweep(**kw)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    emit("megakernel_json_written", 0.0, path)
+    return path
+
+
+def run():
+    sweep()
+
+
+if __name__ == "__main__":
+    run()

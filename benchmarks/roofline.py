@@ -65,6 +65,50 @@ def terms(rec: dict) -> Optional[dict]:
             "useful_ratio": ratio, "roofline_fraction": frac}
 
 
+def gstats_intensity(m: int, n: int, d: int, k: int = 1, tm: int = 128,
+                     dtype_bytes: int = 4) -> dict:
+    """Analytic arithmetic-intensity terms for one g-stats dispatch:
+    ``m`` candidate arms x ``n`` references x ``d`` features, ``k`` stat
+    columns (1 for BUILD, k medoids for SWAP), candidate tiles of ``tm``
+    rows.
+
+    Two variants of the same FLOPs (distance matmul + the Eq. 6/Eq. 12
+    clamp-and-reduce VPU tail):
+
+    * *materialised* — the historical two-pass shape: the ``[m, n]``
+      distance block is written to HBM by the pairwise pass and read
+      back by the stats pass (`2·m·n` words of pure block traffic).
+    * *fused* — the streaming megakernel: the block never leaves VMEM;
+      HBM traffic is operands (the reference set re-read once per
+      candidate tile) plus the three ``[m, k]`` stat outputs.
+
+    The intensity gain is exactly the ratio the roofline model converts
+    into wall-clock once a dispatch is memory-bound, which the
+    materialised variant always is for n past a few thousand
+    (ridge point ≈ PEAK_FLOPS / HBM_BW ≈ 240 FLOP/byte).
+    """
+    tiles = -(-m // tm)
+    kp = max(int(k), 1)
+    operand_bytes = float(m * d + tiles * n * d) * dtype_bytes
+    out_bytes = 3.0 * m * kp * dtype_bytes
+    block_bytes = 2.0 * m * n * dtype_bytes
+    flops = 2.0 * m * n * d + 10.0 * m * n
+    b_fused = operand_bytes + out_bytes
+    b_mat = operand_bytes + out_bytes + block_bytes
+    ridge = PEAK_FLOPS / HBM_BW
+    return {
+        "flops": flops,
+        "bytes_fused": b_fused,
+        "bytes_materialised": b_mat,
+        "intensity_fused": flops / b_fused,
+        "intensity_materialised": flops / b_mat,
+        "intensity_gain": b_mat / b_fused,
+        "ridge_point": ridge,
+        "memory_bound_fused": flops / b_fused < ridge,
+        "memory_bound_materialised": flops / b_mat < ridge,
+    }
+
+
 _SUGGEST = {
     "compute": "reduce recompute (remat policy) / pad-free einsums to raise "
                "useful-FLOP ratio",

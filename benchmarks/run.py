@@ -27,8 +27,9 @@ def main(argv=None) -> None:
     from repro.api import available_solvers
 
     from . import (core_bench, distributed_bench, kernels_bench,
-                   loss_quality, multifit_bench, roofline, scaling_n,
-                   serve_bench, sigma_adaptivity, solvers, violation_pca)
+                   loss_quality, megakernel_bench, multifit_bench, roofline,
+                   scaling_n, serve_bench, sigma_adaptivity, solvers,
+                   violation_pca)
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", nargs="?", const="BENCH_solvers.json",
@@ -49,11 +50,13 @@ def main(argv=None) -> None:
         multifit_bench.write_json(
             os.path.join(outdir, "BENCH_multifit.json"))
         serve_bench.write_json(os.path.join(outdir, "BENCH_serve.json"))
+        megakernel_bench.write_json(
+            os.path.join(outdir, "BENCH_megakernel.json"))
         return
     failed = []
     for mod in (loss_quality, scaling_n, sigma_adaptivity, violation_pca,
                 solvers, core_bench, distributed_bench, multifit_bench,
-                serve_bench, kernels_bench, roofline):
+                serve_bench, kernels_bench, megakernel_bench, roofline):
         try:
             if mod is solvers:
                 mod.sweep(solvers=args.solver)

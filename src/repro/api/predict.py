@@ -1,8 +1,12 @@
 """Batched out-of-sample inference against fitted medoids.
 
-New points never touch the solvers: assigning a query point is one
-``[m_query, k]`` pairwise-dissimilarity block against the k medoid rows,
-chunked over the query axis so the resident block never exceeds
+New points never touch the solvers.  Assignment (:func:`assign_medoids`)
+is one streaming dispatch through the backend's top-2 contract
+(``StatsBackend.top2``, docs/design.md #8): the ``[m, k]`` distance block
+is reduced tile-by-tile as it is produced and never materialised, so
+there is no query-chunk loop and memory stays linear in m.  Full distance
+*matrices* (:func:`medoid_distances`, where the block IS the product) are
+still chunked over the query axis so the resident block never exceeds
 ``chunk × max(k, d)`` — on TPU that keeps each Pallas tile set comfortably
 inside VMEM regardless of how many points are being scored.
 
@@ -67,6 +71,15 @@ def bucket_rows(m: int, chunk: int) -> int:
     return min(1 << (m - 1).bit_length(), chunk)
 
 
+def assign_rows(m: int) -> int:
+    """Row bucket for the chunk-free assignment path: the smallest power
+    of two >= m, UNclamped — the streaming top-2 backend pass holds one
+    row tile resident regardless of m, so there is no chunk ceiling to
+    respect; a stream of ragged sizes still touches only ``log2(m)``
+    compiled variants."""
+    return 1 << (max(1, m) - 1).bit_length()
+
+
 @functools.lru_cache(maxsize=None)
 def get_predict_fn(k: int, d: int, metric: str, backend: str, rows: int):
     """Jitted ``([rows, d], [k, d]) -> (dist [rows, k], labels [rows],
@@ -126,23 +139,48 @@ def medoid_distances(x: np.ndarray, medoid_points: jnp.ndarray, metric: str,
     return out
 
 
+@functools.lru_cache(maxsize=None)
+def get_assign_fn(k: int, d: int, metric: str, backend: str, rows: int):
+    """Jitted ``([rows, d], [k, d]) -> (labels [rows], dmin [rows])``
+    closure over the backend's streaming top-2 pass, memoised on its full
+    trace key (same discipline as :func:`get_predict_fn`).  One dispatch
+    covers any request size — the ``[rows, k]`` distance block is reduced
+    tile-by-tile inside the backend and never materialised."""
+    be = get_stats_backend(backend)
+
+    def _fn(xc, med):
+        d1, _, labels = be.top2(xc, med, metric=metric)
+        return labels, d1
+
+    return jax.jit(_fn)
+
+
 def assign_medoids(x: np.ndarray, medoid_points: jnp.ndarray, metric: str,
                    *, backend: Optional[str] = None,
                    chunk: int = DEFAULT_CHUNK
                    ) -> Tuple[np.ndarray, np.ndarray]:
     """``[m, d]`` queries → ``(labels [m] int32, dmin [m] float32)``.
 
-    The serving assignment path: label + nearest-medoid distance come out
-    of the same dispatch as the distance block, so the drift monitor's
-    loss samples are free once a request has been answered.
+    The serving assignment path: one streaming dispatch through the
+    backend's top-2 contract (``StatsBackend.top2``) for the whole
+    request — no host-side chunk loop, no ``[m, k]`` block.  ``chunk``
+    is kept for API compatibility but no longer bounds the dispatch; the
+    streaming pass holds a single row tile resident at any m.
     """
+    del chunk  # legacy knob: the streaming pass needs no query chunking
     bname = resolve_backend(backend, metric)
-    chunk = max(1, int(chunk))
+    k, d = int(medoid_points.shape[0]), int(medoid_points.shape[1])
+    x = np.asarray(x, np.float32)
     m = x.shape[0]
-    labels = np.empty((m,), np.int32)
-    dmin = np.empty((m,), np.float32)
-    for lo, m_c, _, lab_c, dmin_c in _run_chunks(x, medoid_points, metric,
-                                                 bname, chunk):
-        labels[lo:lo + m_c] = np.asarray(lab_c, np.int32)[:m_c]
-        dmin[lo:lo + m_c] = np.asarray(dmin_c, np.float32)[:m_c]
-    return labels, dmin
+    if m == 0:
+        return np.empty((0,), np.int32), np.empty((0,), np.float32)
+    rows = assign_rows(m)
+    if rows == m:
+        xq = x
+    else:
+        xq = np.zeros((rows, d), np.float32)
+        xq[:m] = x
+    fn = get_assign_fn(k, d, metric, bname, rows)
+    labels, dmin = fn(jnp.asarray(xq), medoid_points)
+    return (np.array(np.asarray(labels, np.int32)[:m]),
+            np.array(np.asarray(dmin, np.float32)[:m]))

@@ -82,7 +82,8 @@ from .distances import get_metric
 from .engine import (_EXACT_CHUNK, _build_g, _ref_chunks, _swap_batch_stats,
                      _swap_terms, FitContext, cache_read_or_write,
                      counted_dispatch, exact_build_means, exact_swap_means,
-                     get_stats_backend, medoid_cache, resolve_stats_backend,
+                     get_stats_backend, medoid_cache, observe_tiles,
+                     resolve_stats_backend, resolve_tile_config, stream_columns,
                      total_loss)
 from .pic_cache import (PicCache, carry_valid, fresh_positions, make_cache,
                         resolve_batch_cache_rounds, resolve_cache_rounds)
@@ -706,8 +707,9 @@ class BanditPAM:
                 # reuse="none" (clamped to the ring capacity)
                 warm = min(min(self.cache_cols, n) // B, W)
                 if warm > 0:
-                    cols = be.pairwise(data, data[perm_idx[:warm * B]],
-                                       metric=self.metric)
+                    cols = stream_columns(be, data,
+                                          data[perm_idx[:warm * B]],
+                                          metric=self.metric)
                     cache = PicCache(
                         cache.cols.at[:, :warm * B].set(cols),
                         jnp.int32(warm), jnp.uint32(warm * B))
@@ -720,7 +722,8 @@ class BanditPAM:
             c = (min(self.cache_cols, n) // B) * B
             if c > 0:
                 perm = jax.random.permutation(ckey, n).astype(jnp.int32)
-                dwarm = be.pairwise(data, data[perm[:c]], metric=self.metric)
+                dwarm = stream_columns(be, data, data[perm[:c]],
+                                       metric=self.metric)
                 res.evals_by_phase["cache_warm"] = n * c
                 return FitContext(mode="warm", backend=backend, perm=perm,
                                   dwarm=dwarm, free_rounds=c // B)
@@ -949,6 +952,13 @@ class BanditPAM:
                                  if not ph.endswith("_cached"))
         res.cached_evals = sum(v for ph, v in res.evals_by_phase.items()
                                if ph.endswith("_cached"))
+        # Feed the measured phase walls back to the tile tuner: the next
+        # resolve for this (n, d, k, device, backend) shape class prefers
+        # the fastest observed config over the VMEM heuristic.
+        observe_tiles(n, data.shape[1], self.k,
+                      resolve_tile_config(n, data.shape[1], self.k,
+                                          backend=backend),
+                      res.wall_by_phase, backend=backend)
         return res
 
     def fit_batch(self, datasets, seeds=None) -> BatchFitReport:

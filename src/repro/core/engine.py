@@ -55,35 +55,106 @@ from .distances import get_metric, pairwise
 from .pic_cache import (PicCache, cache_read_or_write, carry_valid,  # noqa: F401
                         fresh_positions, make_cache,  # noqa: F401
                         resolve_cache_rounds)  # noqa: F401
+from .tuning import (REF_TILE, TileConfig, observe as observe_tiles,  # noqa: F401
+                     resolve_tile_config)  # noqa: F401
 
 _EXACT_CHUNK = 512  # reference-chunk size for exact fallback passes
 
+# The streaming kernels' reference-tile width must share the exact-pass
+# chunk boundaries — that alignment is what makes the tile-walk
+# accumulation order reproduce the chunked-scan ledgers bit-for-bit
+# (docs/design.md #8).
+assert REF_TILE == _EXACT_CHUNK, (REF_TILE, _EXACT_CHUNK)
+
 
 # ---------------------------------------------------------------------------
-# Shared cache / loss helpers
+# Shared cache / loss helpers — streaming forms (design.md #8): the
+# distance block is reduced per row-tile as it is produced, so no
+# ``[n, k]`` / ``[n, chunk]`` matrix is ever resident.  Small inputs
+# (n <= one tile) take the single-block branch, which is byte-identical
+# to the historical materialised path.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("metric",))
-def medoid_cache(data: jnp.ndarray, medoids: jnp.ndarray, *, metric: str
-                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """d1 (nearest-medoid dist), d2 (second nearest), assignment; [n] each."""
-    dmat = get_metric(metric)(data, data[medoids])          # [n, k]
+def _stream_rows(data: jnp.ndarray, tile: int, fn, init, axis: int = -1):
+    """Walk ``data`` ([n, d], n > tile) in row tiles, writing each
+    ``fn(xt)`` strip (a pytree of arrays with a ``tile``-long ``axis``)
+    into the matching ``init`` output buffer at the tile's row offset.
+
+    No padded copy of the input is ever formed — each step slices one
+    [tile, d] strip, so the whole walk's temp footprint is one strip plus
+    one [tile, ·] result block.  The final tile is realigned to end at
+    row n; rows in the overlap are recomputed and rewritten with the
+    same bytes (every registered metric is row-independent, and the
+    per-row reduction shape is tile-offset-invariant)."""
+    n = data.shape[0]
+    nt = -(-n // tile)
+
+    def body(i, out):
+        start = jnp.minimum(i * tile, n - tile)
+        xt = jax.lax.dynamic_slice_in_dim(data, start, tile, 0)
+        return jax.tree_util.tree_map(
+            lambda o, r: jax.lax.dynamic_update_slice_in_dim(
+                o, r, start, axis % o.ndim),
+            out, fn(xt))
+
+    return jax.lax.fori_loop(0, nt, body, init)
+
+
+def _top2_block(dmat: jnp.ndarray):
+    """Single-pass nearest/second-nearest reduction of one distance
+    block: no ``.at[].set(inf)`` copy — the runner-up min masks the
+    winner's column with ``where`` instead of duplicating the block."""
     assign = jnp.argmin(dmat, axis=1).astype(jnp.int32)
     d1 = jnp.min(dmat, axis=1)
-    dmat2 = dmat.at[jnp.arange(dmat.shape[0]), assign].set(jnp.inf)
-    d2 = jnp.min(dmat2, axis=1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, dmat.shape, 1)
+    d2 = jnp.min(jnp.where(cols == assign[:, None], jnp.inf, dmat), axis=1)
     return d1, d2, assign
 
 
-@functools.partial(jax.jit, static_argnames=("metric",))
+def _stream_top2_jnp(x, med_pts, *, metric: str, tile: int = _EXACT_CHUNK):
+    """Streaming top-2 over row tiles: ``[n, d]`` x ``[k, d]`` ->
+    (d1, d2, assign), [n] each, with only one [tile, k] block live."""
+    n = x.shape[0]
+    fn = get_metric(metric)
+    if n <= tile:
+        return _top2_block(fn(x, med_pts))
+    init = (jnp.zeros((n,), jnp.float32), jnp.zeros((n,), jnp.float32),
+            jnp.zeros((n,), jnp.int32))
+    return _stream_rows(x, tile, lambda xt: _top2_block(fn(xt, med_pts)),
+                        init)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "tile"))
+def medoid_cache(data: jnp.ndarray, medoids: jnp.ndarray, *, metric: str,
+                 tile: Optional[int] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """d1 (nearest-medoid dist), d2 (second nearest), assignment; [n] each.
+    One streaming top-2 pass — the hottest per-iteration helper holds a
+    single [tile, k] block instead of ``[n, k]`` plus an inf-masked copy."""
+    t = _EXACT_CHUNK if tile is None else int(tile)
+    return _stream_top2_jnp(data, data[medoids], metric=metric, tile=t)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "tile"))
 def total_loss(data: jnp.ndarray, medoids: jnp.ndarray, *, metric: str,
-               w=None) -> jnp.ndarray:
+               w=None, tile: Optional[int] = None) -> jnp.ndarray:
     """Sum of nearest-medoid dissimilarities.  ``w`` (optional bool [n])
     masks rows out of the sum — the batched multi-fit path scores padded
     datasets with it (``jnp.where``, not a multiply, so NaN rows from
-    degenerate pad points cannot poison the loss)."""
-    dmat = get_metric(metric)(data, data[medoids])
-    dmin = jnp.min(dmat, axis=1)
+    degenerate pad points cannot poison the loss).  The nearest-distance
+    vector is reduced tile-by-tile; the final sum runs over the intact
+    [n] vector so summation order (and the ledger's loss bits) match the
+    historical materialised path."""
+    t = _EXACT_CHUNK if tile is None else int(tile)
+    n = data.shape[0]
+    med = data[medoids]
+    fn = get_metric(metric)
+    if n <= t:
+        dmin = jnp.min(fn(data, med), axis=1)
+    else:
+        dmin = _stream_rows(data, t,
+                            lambda xt: jnp.min(fn(xt, med), axis=1),
+                            jnp.zeros((n,), jnp.float32))
     if w is None:
         return jnp.sum(dmin)
     return jnp.sum(jnp.where(w, dmin, 0.0))
@@ -100,41 +171,96 @@ def _ref_chunks(n_ref: int, chunk: int) -> Tuple[np.ndarray, np.ndarray]:
 
 def exact_build_means(be, data, dnear, *, metric: str) -> jnp.ndarray:
     """Exact BUILD objective over the full reference set (Algorithm 1
-    lines 13–15 fallback): per-arm mean g, [n].  Chunked scan through the
-    backend's pairwise path so the resident block stays bounded — the one
-    definition shared by the single-device and sharded drivers."""
+    lines 13–15 fallback): per-arm mean g, [n].  Routed through the
+    backend's streaming g-stats contract — one dispatch that walks
+    ``_EXACT_CHUNK``-aligned reference tiles and accumulates online, so
+    the resident block stays bounded and no ``[n, chunk]`` distance
+    matrix is ever materialised — the one definition shared by the
+    single-device and sharded drivers."""
     n = data.shape[0]
-    idx_np, w_np = _ref_chunks(n, _EXACT_CHUNK)
-    idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
-
-    def body(acc, iw):
-        i, w_i = iw
-        dxy = be.pairwise(data, data[i], metric=metric)
-        s, _, _ = be.build_stats_from_d(dxy, dnear[i], w_i, None)
-        return acc + s, None
-
-    sums, _ = jax.lax.scan(body, jnp.zeros((n,), jnp.float32), (idx, w))
-    return sums / n
+    return be.stream_build_sums(data, dnear, metric=metric) / n
 
 
 def exact_swap_means(be, data, d1, d2, assign, k: int, *, metric: str
                      ) -> jnp.ndarray:
     """Exact SWAP objective over the flattened (medoid, candidate) arm
-    set: per-arm mean g, [k·n]; same chunked backend-routed form as
+    set: per-arm mean g, [k·n]; same streaming backend-routed form as
     :func:`exact_build_means`."""
     n = data.shape[0]
-    idx_np, w_np = _ref_chunks(n, _EXACT_CHUNK)
+    return be.stream_swap_sums(data, d1, d2, assign, k, metric=metric) / n
+
+
+def _stream_build_sums_jnp(data, dnear, *, metric: str,
+                           tile: int = _EXACT_CHUNK) -> jnp.ndarray:
+    """jnp streaming BUILD g-sums, Σ_y g(x, y) over the whole dataset,
+    [n].  The reference walk is the historical ``_ref_chunks`` scan (same
+    tile boundaries, same per-tile op order, tiles added in walk order),
+    row-tiled by ``lax.map`` so only a [tile, tile] block is live; inputs
+    with n <= one tile take the single-row-block branch, which is the
+    pre-streaming graph verbatim."""
+    n = data.shape[0]
+    idx_np, w_np = _ref_chunks(n, tile)
     idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
+    fn = get_metric(metric)
 
-    def body(acc, iw):
-        i, w_i = iw
-        dxy = be.pairwise(data, data[i], metric=metric)
-        s, _, _ = be.swap_stats_from_d(dxy, d1[i], d2[i], assign[i], w_i, k,
-                                       None)
-        return acc + s, None
+    def walk(xt):
+        def body(acc, iw):
+            i, w_i = iw
+            g = _build_g(fn(xt, data[i]), dnear[i]) * w_i[None, :]
+            return acc + jnp.sum(g, axis=1), None
+        out, _ = jax.lax.scan(body, jnp.zeros((xt.shape[0],), jnp.float32),
+                              (idx, w))
+        return out
 
-    sums, _ = jax.lax.scan(body, jnp.zeros((k * n,), jnp.float32), (idx, w))
-    return sums / n
+    if n <= tile:
+        return walk(data)
+    return _stream_rows(data, tile, walk, jnp.zeros((n,), jnp.float32))
+
+
+def _stream_swap_sums_jnp(data, d1, d2, assign, k: int, *, metric: str,
+                          tile: int = _EXACT_CHUNK) -> jnp.ndarray:
+    """jnp streaming SWAP g-sums over the flattened (medoid, candidate)
+    arm set, [k·n]; same walk discipline as
+    :func:`_stream_build_sums_jnp`."""
+    n = data.shape[0]
+    idx_np, w_np = _ref_chunks(n, tile)
+    idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
+    fn = get_metric(metric)
+
+    def walk(xt):
+        m = xt.shape[0]
+
+        def body(acc, iw):
+            i, w_i = iw
+            s, _ = _swap_batch_stats(fn(xt, data[i]), d1[i], d2[i],
+                                     assign[i], w_i, k)
+            return acc + s, None
+        out, _ = jax.lax.scan(body, jnp.zeros((k * m,), jnp.float32),
+                              (idx, w))
+        return out.reshape(k, m)
+
+    if n <= tile:
+        return walk(data).reshape(-1)
+    return _stream_rows(data, tile, walk,
+                        jnp.zeros((k, n), jnp.float32)).reshape(-1)
+
+
+def stream_columns(be, data, refs, *, metric: str,
+                   tile: int = _EXACT_CHUNK) -> jnp.ndarray:
+    """Produce an ``[n, C]`` cache column block in row strips.
+
+    The block itself IS the product here (warm/PIC caches store it), so
+    its HBM footprint cannot be streamed away — but its *production* can
+    be: each strip holds one [tile, C] distance block at a time instead
+    of tracing a single [n, C] pairwise pass whose intermediates (e.g.
+    the l2 cross-term matmul) scale with n.  Row strips are pinned to the
+    ``_EXACT_CHUNK`` grid like every other walk (docs/design.md #8)."""
+    n = data.shape[0]
+    if n <= tile:
+        return be.pairwise(data, refs, metric=metric)
+    return _stream_rows(data, tile,
+                        lambda xt: be.pairwise(xt, refs, metric=metric),
+                        jnp.zeros((n, refs.shape[0]), jnp.float32), axis=0)
 
 
 # ---------------------------------------------------------------------------
@@ -243,6 +369,21 @@ class JnpStatsBackend:
             return s, q, jnp.zeros_like(s)
         return _swap_batch_stats(dxy, d1_b, d2_b, assign_b, w, k, lead=lead)
 
+    # -- streaming contract (exact fallback / top-2 serving passes) ------
+    def stream_build_sums(self, data, dnear, *, metric):
+        """Σ_y g(x, y) over the WHOLE dataset, [n] — no [n, chunk] block."""
+        return _stream_build_sums_jnp(data, dnear, metric=metric)
+
+    def stream_swap_sums(self, data, d1, d2, assign, k, *, metric):
+        """Flattened (medoid, candidate) arm g-sums over the whole
+        dataset, [k·n] — no [n, chunk] block."""
+        return _stream_swap_sums_jnp(data, d1, d2, assign, k, metric=metric)
+
+    def top2(self, x, med_pts, *, metric):
+        """(d1, d2, assign) of x against medoid rows, [n] each, without
+        materialising the [n, k] distance matrix."""
+        return _stream_top2_jnp(x, med_pts, metric=metric)
+
 
 class PallasStatsBackend:
     """Fused Pallas kernels (``repro.kernels``): the distance tile and the
@@ -324,6 +465,39 @@ class PallasStatsBackend:
                                           lead_g, tm=self.tm,
                                           interpret=self.interpret)
         return s.reshape(-1), q.reshape(-1), c.reshape(-1)
+
+    # -- streaming contract ---------------------------------------------
+    def _stream_ok(self, d: int, metric: str) -> bool:
+        # The streaming kernels hold both operand tiles feature-resident
+        # (g-statistics are not additive across feature chunks), so very
+        # wide inputs fall back to the tiled jnp walk.
+        from repro.kernels import ops
+        return metric in ops.KERNEL_METRICS and -(-d // 128) * 128 <= ops.DK_MAX
+
+    def stream_build_sums(self, data, dnear, *, metric):
+        from repro.kernels import ops
+        if not self._stream_ok(data.shape[1], metric):
+            return _stream_build_sums_jnp(data, dnear, metric=metric)
+        s, _, _ = ops.stream_build_g_stats(data, data, dnear, metric=metric,
+                                           interpret=self.interpret)
+        return s
+
+    def stream_swap_sums(self, data, d1, d2, assign, k, *, metric):
+        from repro.kernels import ops
+        if not self._stream_ok(data.shape[1], metric):
+            return _stream_swap_sums_jnp(data, d1, d2, assign, k,
+                                         metric=metric)
+        s, _, _ = ops.stream_swap_g_stats(data, data, d1, d2, assign, None,
+                                          k, metric=metric,
+                                          interpret=self.interpret)
+        return s.reshape(-1)
+
+    def top2(self, x, med_pts, *, metric):
+        from repro.kernels import ops
+        if not self._stream_ok(x.shape[1], metric):
+            return _stream_top2_jnp(x, med_pts, metric=metric)
+        return ops.stream_top2(x, med_pts, metric=metric,
+                               interpret=self.interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -2,8 +2,10 @@
 # evaluation (>=98% of BanditPAM wall clock).  Validated on CPU in
 # interpret mode against ref.py; lowers to Mosaic on TPU.
 from . import ops, ref
-from .ops import (build_g_stats, install, pairwise_distance, swap_g_stats,
-                  swap_g_stats_cached)
+from .ops import (build_g_stats, install, pairwise_distance,
+                  stream_build_g_stats, stream_swap_g_stats, stream_top2,
+                  swap_g_stats, swap_g_stats_cached)
 
 __all__ = ["ops", "ref", "pairwise_distance", "build_g_stats",
-           "swap_g_stats", "swap_g_stats_cached", "install"]
+           "swap_g_stats", "swap_g_stats_cached", "stream_build_g_stats",
+           "stream_swap_g_stats", "stream_top2", "install"]

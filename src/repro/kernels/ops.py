@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from . import build_g as _build_g
 from . import pairwise as _pairwise
+from . import stream_g as _stream_g
 from . import swap_g as _swap_g
 
 
@@ -75,12 +76,29 @@ def pairwise_distance(x: jnp.ndarray, y: jnp.ndarray, metric: str = "l2",
             "cosine": "dot"}.get(metric)
     if core is None:
         raise ValueError(f"unknown metric {metric!r}")
-    acc = None
-    for lo in range(0, xp.shape[1], dk):
-        part = _pairwise.pairwise_kernel(
-            xp[:, lo:lo + dk], yp[:, lo:lo + dk], metric=core, tm=tm, tr=tr,
-            interpret=interpret)
-        acc = part if acc is None else acc + part
+    if xp.shape[1] <= dk:
+        acc = _pairwise.pairwise_kernel(xp, yp, metric=core, tm=tm, tr=tr,
+                                        interpret=interpret)
+    else:
+        # Wide features accumulate through a lax loop with an additive
+        # carry (one kernel trace regardless of d), instead of the
+        # historical Python loop that unrolled one kernel call per
+        # dk-chunk into the jit.  The lane padding moves to the last
+        # chunk's tail, where the zero features leave every partial sum
+        # untouched.
+        xp = _pad_to(xp, 1, dk)
+        yp = _pad_to(yp, 1, dk)
+        n_ch = xp.shape[1] // dk
+
+        def body(c, acc):
+            xs = jax.lax.dynamic_slice_in_dim(xp, c * dk, dk, 1)
+            ys = jax.lax.dynamic_slice_in_dim(yp, c * dk, dk, 1)
+            return acc + _pairwise.pairwise_kernel(
+                xs, ys, metric=core, tm=tm, tr=tr, interpret=interpret)
+
+        acc = jax.lax.fori_loop(
+            0, n_ch, body,
+            jnp.zeros((xp.shape[0], yp.shape[0]), jnp.float32))
     acc = acc[:m, :r]
     if metric == "l2":
         return jnp.sqrt(acc)
@@ -116,16 +134,18 @@ def build_g_stats(x: jnp.ndarray, y: jnp.ndarray, dnear_b: jnp.ndarray,
     return sums[:m], sq[:m], cross[:m]
 
 
-def _swap_prep(d1_b, d2_b, assign_b, w, k, lead_g, pad_b):
+def _swap_prep(d1_b, d2_b, assign_b, w, k, lead_g, pad_b, row_mult=128):
     """Shared SWAP-kernel operand prep: pad the per-reference vectors,
-    w-mask the leader row, w-fold + lane-pad the cluster one-hot."""
+    w-mask the leader row, w-fold + lane-pad the cluster one-hot.
+    ``row_mult`` is the reference-axis tile the one-hot must align to
+    (128 for the batch-resident kernels, ``tb`` for the streaming walk)."""
     if lead_g is None:
         lead_g = jnp.zeros_like(d1_b)
     d1 = jnp.pad(d1_b, (0, pad_b))
     d2 = jnp.pad(d2_b, (0, pad_b))
     lg = jnp.pad(lead_g * w, (0, pad_b))      # leader row must be w-masked
     oh = jax.nn.one_hot(assign_b, k, dtype=jnp.float32) * w[:, None]
-    oh = _pad_to(_pad_to(oh, 1, 128), 0, 128)
+    oh = _pad_to(_pad_to(oh, 1, 128), 0, row_mult)
     return d1, d2, oh, lg
 
 
@@ -202,6 +222,114 @@ def swap_g_stats_cached(dxy: jnp.ndarray, d1_b: jnp.ndarray,
                 sums, sq, cross = (sums + part[0], sq + part[1],
                                    cross + part[2])
     return sums[:m, :k].T, sq[:m, :k].T, cross[:m, :k].T
+
+
+# ---------------------------------------------------------------------------
+# Streaming g-stats megakernel wrappers (kernels/stream_g.py)
+# ---------------------------------------------------------------------------
+
+def _stream_tiles(n, d, k, tm, tb):
+    """Resolve (tm, tb) through the backend-aware tuner when unset.
+    Lazy import: ``repro.core.tuning`` is dependency-free, but going
+    through the package keeps kernel import standalone."""
+    from repro.core import tuning
+    if tm is None or tb is None:
+        cfg = tuning.resolve_tile_config(n, d, k, backend="pallas")
+        tm = cfg.tm if tm is None else tm
+        tb = cfg.tb if tb is None else tb
+    return tm, tb
+
+
+def _check_stream_d(d_pad: int, what: str) -> None:
+    if d_pad > DK_MAX:
+        raise ValueError(
+            f"{what} holds both operand tiles feature-resident; padded "
+            f"d={d_pad} exceeds the dk budget {DK_MAX} (g-statistics are "
+            f"not additive across feature chunks) — use the tiled jnp "
+            f"streaming path for wider features")
+
+
+def stream_build_g_stats(x: jnp.ndarray, yref: jnp.ndarray,
+                         dnear: jnp.ndarray, w: Optional[jnp.ndarray] = None,
+                         lead_g: Optional[jnp.ndarray] = None,
+                         *, metric: str = "l2", tm: Optional[int] = None,
+                         tb: Optional[int] = None,
+                         interpret: Optional[bool] = None
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Streaming BUILD statistics over an UNBOUNDED reference set: one
+    dispatch walks ``yref`` in ``tb``-tiles and accumulates (Σg, Σg²,
+    Σg·g_lead) online — the exact-fallback pass (yref = the whole
+    dataset) without any ``[m, chunk]`` HBM block."""
+    if interpret is None:
+        interpret = _default_interpret()
+    m, d = x.shape
+    r = yref.shape[0]
+    tm, tb = _stream_tiles(m, d, 1, tm, tb)
+    if w is None:
+        w = jnp.ones((r,), jnp.float32)
+    if lead_g is None:
+        lead_g = jnp.zeros((r,), jnp.float32)
+    xp = _pad_to(_pad_to(x, 1, 128), 0, tm)
+    yp = _pad_to(_pad_to(yref, 1, 128), 0, tb)
+    _check_stream_d(xp.shape[1], "stream_build_g_stats")
+    pad_r = yp.shape[0] - r
+    dn = jnp.pad(dnear, (0, pad_r))
+    wp = jnp.pad(w, (0, pad_r))               # padded refs get weight 0
+    lg = jnp.pad(lead_g, (0, pad_r))
+    sums, sq, cross = _stream_g.stream_build_g_kernel(
+        xp, yp, dn, wp, lg, metric=metric, tm=tm, tb=tb, interpret=interpret)
+    return sums[:m], sq[:m], cross[:m]
+
+
+def stream_swap_g_stats(x: jnp.ndarray, yref: jnp.ndarray, d1: jnp.ndarray,
+                        d2: jnp.ndarray, assign: jnp.ndarray,
+                        w: Optional[jnp.ndarray] = None, k: int = 1,
+                        lead_g: Optional[jnp.ndarray] = None,
+                        *, metric: str = "l2", tm: Optional[int] = None,
+                        tb: Optional[int] = None,
+                        interpret: Optional[bool] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Streaming SWAP (FastPAM1) statistics over an unbounded reference
+    set; same contract as ``swap_g_stats`` ([k, m] outputs) with the
+    reference walk replacing the resident batch."""
+    if interpret is None:
+        interpret = _default_interpret()
+    m, d = x.shape
+    r = yref.shape[0]
+    tm, tb = _stream_tiles(m, d, k, tm, tb)
+    if w is None:
+        w = jnp.ones((r,), jnp.float32)
+    xp = _pad_to(_pad_to(x, 1, 128), 0, tm)
+    yp = _pad_to(_pad_to(yref, 1, 128), 0, tb)
+    _check_stream_d(xp.shape[1], "stream_swap_g_stats")
+    d1p, d2p, oh, lg = _swap_prep(d1, d2, assign, w, k, lead_g,
+                                  yp.shape[0] - r, row_mult=tb)
+    sums, sq, cross = _stream_g.stream_swap_g_kernel(
+        xp, yp, d1p, d2p, oh, lg, metric=metric, tm=tm, tb=tb,
+        interpret=interpret)
+    return sums[:m, :k].T, sq[:m, :k].T, cross[:m, :k].T
+
+
+def stream_top2(x: jnp.ndarray, med_pts: jnp.ndarray, *, metric: str = "l2",
+                tm: Optional[int] = None,
+                interpret: Optional[bool] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Streaming nearest/second-nearest medoid reduction: ``[n, d]``
+    points × ``[k, d]`` medoid rows → (d1[n], d2[n], assign[n] int32)
+    with no ``[n, k]`` HBM block — the loss / assignment / serving pass.
+    Ties resolve to the lowest medoid index (jnp.argmin's rule)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n, d = x.shape
+    k = med_pts.shape[0]
+    tm, _ = _stream_tiles(n, d, k, tm, None)
+    xp = _pad_to(_pad_to(x, 1, 128), 0, tm)
+    mp = _pad_to(_pad_to(med_pts, 1, 128), 0, 128)
+    _check_stream_d(xp.shape[1], "stream_top2")
+    kmask = jnp.pad(jnp.ones((k,), jnp.float32), (0, mp.shape[0] - k))
+    d1, d2, a = _stream_g.stream_top2_kernel(xp, mp, kmask, metric=metric,
+                                             tm=tm, interpret=interpret)
+    return d1[:n], d2[:n], a[:n]
 
 
 def install(metrics=("l2", "l2sq", "cosine", "l1")) -> None:

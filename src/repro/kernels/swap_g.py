@@ -37,22 +37,33 @@ from jax.experimental import pallas as pl
 from .pairwise import dist_tile
 
 
-def _stats_from_d(d, d1_ref, d2_ref, oh_ref, lg_ref,
-                  sums_ref, sq_ref, cross_ref):
-    """Shared fused-stats body, given the [TM, B] distance tile ``d``."""
-    d1 = d1_ref[0, :][None, :]
-    d2 = d2_ref[0, :][None, :]
-    oh = oh_ref[...]                                      # [B, K] (w-folded)
-    lg = lg_ref[0, :]                                     # [B]   (w-folded)
+def swap_stats_vals(d, d1, d2, oh, lg):
+    """Pure fused-stats tile math: [TM, B] distances + per-reference
+    vectors -> the three [TM, K] stat blocks.  Shared by the one-shot
+    kernels here and the streaming megakernel (``stream_g``), so every
+    SWAP surface reduces one tile with byte-identical op order."""
+    d1 = d1[None, :]
+    d2 = d2[None, :]
     w = jnp.sign(jnp.sum(oh, axis=1))[None, :]            # recover {0,1} mask
     base = (jnp.minimum(d, d1) - d1) * w
     corr = jnp.minimum(d, d2) - jnp.minimum(d, d1)
     dot = lambda a: jax.lax.dot_general(
         a, oh, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    sums_ref[...] = jnp.sum(base, 1, keepdims=True) + dot(corr)
-    sq_ref[...] = jnp.sum(base * base, 1, keepdims=True) + dot(
+    sums = jnp.sum(base, 1, keepdims=True) + dot(corr)
+    sq = jnp.sum(base * base, 1, keepdims=True) + dot(
         2.0 * base * corr + corr * corr)
-    cross_ref[...] = (base @ lg)[:, None] + dot(corr * lg[None, :])
+    cross = (base @ lg)[:, None] + dot(corr * lg[None, :])
+    return sums, sq, cross
+
+
+def _stats_from_d(d, d1_ref, d2_ref, oh_ref, lg_ref,
+                  sums_ref, sq_ref, cross_ref):
+    """Shared fused-stats body, given the [TM, B] distance tile ``d``."""
+    sums, sq, cross = swap_stats_vals(d, d1_ref[0, :], d2_ref[0, :],
+                                      oh_ref[...], lg_ref[0, :])
+    sums_ref[...] = sums
+    sq_ref[...] = sq
+    cross_ref[...] = cross
 
 
 def _kernel(x_ref, y_ref, d1_ref, d2_ref, oh_ref, lg_ref,

@@ -1,0 +1,381 @@
+"""Streaming g-stats megakernel (docs/design.md #8).
+
+Four surfaces under test:
+
+* Pallas streaming kernels (``ops.stream_build_g_stats`` /
+  ``stream_swap_g_stats`` / ``stream_top2``) against full-matrix jnp
+  oracles — every kernel metric, ragged shapes, reference widths that
+  straddle the tile boundary, and argmin tie semantics.
+* The jnp streaming forms in ``core.engine`` — BIT-identical to the
+  historical materialised graphs wherever the walk guarantees it
+  (n <= one tile, the inf-copy-free top-2), and value-equivalent above.
+* The serving assignment path (``api.predict.assign_medoids``) through
+  the backend top-2 contract.
+* The compiled peak-memory regression gate: at large n the streaming
+  loss / cache / exact-fallback dispatches must not hold any
+  O(n·k) / O(n·chunk) temp — asserted via
+  ``jit(...).lower().compile().memory_analysis()``.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, tuning
+from repro.core.distances import get_metric
+from repro.kernels import ops
+
+METRICS = list(ops.KERNEL_METRICS)
+
+# (m candidates, r references, d) — r values straddle the 512 reference
+# tile (700), sit exactly on it (512), and one step past it (513); m=130
+# exercises candidate-tile padding.
+SHAPES = [(130, 700, 7), (64, 512, 33), (40, 513, 130)]
+
+
+def _data(m, r, d, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(r, d)).astype(np.float32))
+    return x, y
+
+
+def _tol(metric):
+    # Matmul-lowered metrics accumulate in whatever blocking XLA picks;
+    # the kernels' tiling differs from the oracle's one-shot matmul.
+    return dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Pallas streaming kernels vs full-matrix oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("m,r,d", SHAPES)
+def test_stream_build_matches_oracle(metric, m, r, d):
+    x, y = _data(m, r, d)
+    rng = np.random.default_rng(1)
+    dnear = jnp.asarray(np.abs(rng.normal(size=(r,))).astype(np.float32))
+    # a few inf rows exercise the Eq. 4 first-assignment clamp
+    dnear = dnear.at[::17].set(jnp.inf)
+    w = jnp.asarray((rng.random(r) > 0.1).astype(np.float32))
+    lead_g = jnp.asarray(rng.normal(size=(r,)).astype(np.float32)) * w
+
+    dmat = get_metric(metric)(x, y)
+    g = jnp.where(jnp.isinf(dnear[None, :]), dmat,
+                  jnp.minimum(dmat - dnear[None, :], 0.0)) * w[None, :]
+    s, q, c = ops.stream_build_g_stats(x, y, dnear, w, lead_g,
+                                       metric=metric, interpret=True)
+    np.testing.assert_allclose(s, jnp.sum(g, axis=1), **_tol(metric))
+    np.testing.assert_allclose(q, jnp.sum(g * g, axis=1), **_tol(metric))
+    np.testing.assert_allclose(c, g @ lead_g, **_tol(metric))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("m,r,d", SHAPES)
+def test_stream_swap_matches_oracle(metric, m, r, d):
+    k = 4
+    x, y = _data(m, r, d, seed=2)
+    rng = np.random.default_rng(3)
+    dmat_my = get_metric(metric)(y, y[:k])        # refs vs k "medoids"
+    assign = jnp.argmin(dmat_my, axis=1).astype(jnp.int32)
+    d1 = jnp.min(dmat_my, axis=1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, dmat_my.shape, 1)
+    d2 = jnp.min(jnp.where(cols == assign[:, None], jnp.inf, dmat_my),
+                 axis=1)
+    w = jnp.asarray((rng.random(r) > 0.1).astype(np.float32))
+    lead_g = jnp.asarray(rng.normal(size=(r,)).astype(np.float32)) * w
+
+    # oracle: Eq. 12 decomposition on the full [m, r] block
+    dxy = get_metric(metric)(x, y)
+    base = (jnp.minimum(dxy, d1[None, :]) - d1[None, :]) * w[None, :]
+    corr = (jnp.minimum(dxy, d2[None, :])
+            - jnp.minimum(dxy, d1[None, :]))
+    onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32) * w[:, None]
+    sums_o = jnp.sum(base, axis=1)[None, :] + (corr @ onehot).T
+    sq_o = (jnp.sum(base * base, axis=1)[None, :]
+            + ((2.0 * base * corr + corr * corr) @ onehot).T)
+    cross_o = (base @ lead_g)[None, :] + ((corr * lead_g[None, :])
+                                          @ onehot).T
+
+    s, q, c = ops.stream_swap_g_stats(x, y, d1, d2, assign, w, k, lead_g,
+                                      metric=metric, interpret=True)
+    np.testing.assert_allclose(s, sums_o, **_tol(metric))
+    np.testing.assert_allclose(q, sq_o, **_tol(metric))
+    np.testing.assert_allclose(c, cross_o, **_tol(metric))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_stream_top2_matches_argmin(metric):
+    n, d, k = 700, 13, 5
+    x, _ = _data(n, 1, d, seed=4)
+    med = x[:: n // k][:k]
+    dmat = get_metric(metric)(x, med)
+    a_ref = jnp.argmin(dmat, axis=1).astype(jnp.int32)
+    d1, d2, a = ops.stream_top2(x, med, metric=metric, interpret=True)
+    # index choice must match jnp.argmin exactly (first occurrence)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a_ref))
+    np.testing.assert_allclose(d1, jnp.min(dmat, axis=1), **_tol(metric))
+    cols = jax.lax.broadcasted_iota(jnp.int32, dmat.shape, 1)
+    d2_ref = jnp.min(jnp.where(cols == a_ref[:, None], jnp.inf, dmat),
+                     axis=1)
+    np.testing.assert_allclose(d2, d2_ref, **_tol(metric))
+
+
+def test_stream_top2_tie_breaks_to_first_index():
+    # duplicated medoid rows: every point ties between columns 1 and 3
+    n, d = 260, 9
+    x, _ = _data(n, 1, d, seed=5)
+    med = jnp.stack([x[7], x[3], x[11], x[3]])    # med[1] == med[3]
+    d1, d2, a = ops.stream_top2(x, med, metric="l2sq", interpret=True)
+    a_ref = jnp.argmin(get_metric("l2sq")(x, med), axis=1)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a_ref))
+    # the point sitting ON the duplicated medoid resolves to column 1 and
+    # its runner-up is the duplicate at distance 0
+    assert int(a[3]) == 1
+    assert float(d1[3]) == 0.0 and float(d2[3]) == 0.0
+
+
+def test_stream_wide_features_rejected():
+    x = jnp.zeros((16, ops.DK_MAX + 1), jnp.float32)
+    with pytest.raises(ValueError, match="dk budget"):
+        ops.stream_build_g_stats(x, x, jnp.zeros((16,)), metric="l2sq",
+                                 interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# jnp streaming forms: bit-identity where the walk guarantees it
+# ---------------------------------------------------------------------------
+
+def test_medoid_cache_bit_identical_to_inf_copy():
+    """The where-masked top-2 must reproduce the historical
+    ``.at[arange, assign].set(inf)`` second-minimum bit-for-bit."""
+    for metric in ("l2", "l1"):
+        x, _ = _data(400, 1, 17, seed=6)
+        med_idx = jnp.asarray([3, 99, 250, 7], jnp.int32)
+
+        @jax.jit
+        def oracle(data, medoids, metric=metric):
+            dmat = get_metric(metric)(data, data[medoids])
+            assign = jnp.argmin(dmat, axis=1).astype(jnp.int32)
+            d1 = jnp.min(dmat, axis=1)
+            dmat2 = dmat.at[jnp.arange(dmat.shape[0]), assign].set(jnp.inf)
+            return d1, jnp.min(dmat2, axis=1), assign
+
+        got = engine.medoid_cache(x, med_idx, metric=metric)
+        want = oracle(x, med_idx)
+        for g, o in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(o))
+
+
+def test_stream_build_sums_bit_identical_small_n():
+    """n <= one reference tile: the streaming jnp form must be the
+    pre-streaming chunked-scan graph verbatim (golden-ledger contract)."""
+    n = 300
+    x, _ = _data(n, 1, 21, seed=7)
+    dnear = jnp.full((n,), jnp.inf).at[10:].set(1.3)
+    be = engine.get_stats_backend("jnp")
+
+    @jax.jit
+    def oracle(data, dn):
+        idx_np, w_np = engine._ref_chunks(n, engine._EXACT_CHUNK)
+        idx, w = jnp.asarray(idx_np), jnp.asarray(w_np)
+
+        def body(acc, iw):
+            i, w_i = iw
+            dxy = be.pairwise(data, data[i], metric="l2")
+            s, _, _ = be.build_stats_from_d(dxy, dn[i], w_i, None)
+            return acc + s, None
+
+        sums, _ = jax.lax.scan(body, jnp.zeros((n,), jnp.float32),
+                               (idx, w))
+        return sums / n
+
+    # jit on both sides: the drivers only ever run the exact pass inside
+    # a traced phase, and bit-parity is a property of the traced graph
+    got = jax.jit(lambda data, dn: engine.exact_build_means(
+        be, data, dn, metric="l2"))(x, dnear)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(oracle(x, dnear)))
+
+
+def test_streaming_forms_match_materialised_large_n():
+    """Above one tile the walk regroups f32 adds (a documented, narrow
+    deviation) — values must still agree to fp tolerance."""
+    n, d, k = 1300, 11, 6
+    x, _ = _data(n, 1, d, seed=8)
+    med_idx = jnp.asarray(np.arange(k) * 200, jnp.int32)
+    for metric in ("l2", "l1"):
+        dmat = get_metric(metric)(x, x[med_idx])
+        d1, d2, a = engine.medoid_cache(x, med_idx, metric=metric)
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(jnp.argmin(dmat, axis=1)))
+        np.testing.assert_allclose(d1, jnp.min(dmat, axis=1), rtol=1e-5,
+                                   atol=1e-5)
+        loss = engine.total_loss(x, med_idx, metric=metric)
+        np.testing.assert_allclose(
+            float(loss), float(jnp.sum(jnp.min(dmat, axis=1))), rtol=1e-5)
+    # valid-mask path (batched multi-fit scoring)
+    w = jnp.arange(n) < 1000
+    lw = engine.total_loss(x, med_idx, metric="l1", w=w)
+    dmat = get_metric("l1")(x, x[med_idx])
+    np.testing.assert_allclose(
+        float(lw), float(jnp.sum(jnp.where(w, jnp.min(dmat, axis=1), 0.0))),
+        rtol=1e-5)
+
+
+def test_stream_columns_matches_pairwise():
+    n, c = 1300, 100
+    x, _ = _data(n, 1, 19, seed=9)
+    be = engine.get_stats_backend("jnp")
+    refs = x[:c]
+    got = engine.stream_columns(be, x, refs, metric="l1")
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(be.pairwise(x, refs, metric="l1")))
+    got2 = engine.stream_columns(be, x, refs, metric="l2")
+    np.testing.assert_allclose(got2, be.pairwise(x, refs, metric="l2"),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [300, 700])
+def test_exact_means_backend_equivalence(n):
+    """jnp and pallas streaming exact passes agree across the tile
+    boundary (700 straddles two reference tiles)."""
+    x, _ = _data(n, 1, 23, seed=10)
+    k = 3
+    med_idx = jnp.asarray([1, n // 2, n - 2], jnp.int32)
+    d1, d2, a = engine.medoid_cache(x, med_idx, metric="l2sq")
+    dnear = d1
+    bj = engine.get_stats_backend("jnp")
+    bp = engine.get_stats_backend("pallas")
+    np.testing.assert_allclose(
+        engine.exact_build_means(bj, x, dnear, metric="l2sq"),
+        engine.exact_build_means(bp, x, dnear, metric="l2sq"),
+        rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        engine.exact_swap_means(bj, x, d1, d2, a, k, metric="l2sq"),
+        engine.exact_swap_means(bp, x, d1, d2, a, k, metric="l2sq"),
+        rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Serving assignment path
+# ---------------------------------------------------------------------------
+
+def test_assign_medoids_streaming():
+    from repro.api import predict
+    n, d, k = 1500, 12, 7
+    x, _ = _data(n, 1, d, seed=11)
+    med = x[jnp.asarray(np.arange(k) * 200, jnp.int32)]
+    labels, dmin = predict.assign_medoids(np.asarray(x), med, "l2",
+                                          backend="jnp")
+    dmat = get_metric("l2")(x, med)
+    np.testing.assert_array_equal(labels,
+                                  np.asarray(jnp.argmin(dmat, axis=1)))
+    np.testing.assert_allclose(dmin, jnp.min(dmat, axis=1), rtol=1e-5,
+                               atol=1e-5)
+    # legacy chunk knob must not change the answer (it is ignored)
+    l2, m2 = predict.assign_medoids(np.asarray(x), med, "l2",
+                                    backend="jnp", chunk=64)
+    np.testing.assert_array_equal(labels, l2)
+    np.testing.assert_array_equal(dmin, m2)
+    # closure cache: one compiled variant per (k, d, metric, backend, rows)
+    assert predict.get_assign_fn(k, d, "l2", "jnp", 2048) is \
+        predict.get_assign_fn(k, d, "l2", "jnp", 2048)
+    # empty request
+    l0, m0 = predict.assign_medoids(np.zeros((0, d), np.float32), med, "l2",
+                                    backend="jnp")
+    assert l0.shape == (0,) and m0.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# Compiled peak-memory regression gate (satellite: CI memory check)
+# ---------------------------------------------------------------------------
+
+N_BIG, D_BIG, K_BIG = 200_000, 16, 256
+
+
+def _temp_bytes(fn, *args):
+    ma = jax.jit(fn).lower(*args).compile().memory_analysis()
+    if ma is None or not hasattr(ma, "temp_size_in_bytes"):
+        pytest.skip("compiled memory_analysis unavailable on this backend")
+    return int(ma.temp_size_in_bytes)
+
+
+def _big_specs():
+    return (jax.ShapeDtypeStruct((N_BIG, D_BIG), jnp.float32),
+            jax.ShapeDtypeStruct((K_BIG,), jnp.int32))
+
+
+def test_total_loss_holds_no_nk_block():
+    x, med = _big_specs()
+    block = N_BIG * K_BIG * 4
+
+    def materialised(data, medoids):
+        dmat = get_metric("l2")(data, data[medoids])
+        return jnp.sum(jnp.min(dmat, axis=1))
+
+    # the gate must be meaningful: the materialised graph really does
+    # hold the O(n·k) block ...
+    assert _temp_bytes(materialised, x, med) >= block
+    # ... and the streaming dispatch holds well under a tenth of it
+    streaming = _temp_bytes(
+        functools.partial(engine.total_loss, metric="l2"), x, med)
+    assert streaming < block // 10
+
+
+def test_medoid_cache_holds_no_nk_block():
+    x, med = _big_specs()
+    block = N_BIG * K_BIG * 4
+    streaming = _temp_bytes(
+        functools.partial(engine.medoid_cache, metric="l2"), x, med)
+    assert streaming < block // 10
+
+
+def test_exact_fallback_holds_no_chunk_block():
+    x = jax.ShapeDtypeStruct((N_BIG, D_BIG), jnp.float32)
+    dn = jax.ShapeDtypeStruct((N_BIG,), jnp.float32)
+    be = engine.get_stats_backend("jnp")
+    block = N_BIG * engine._EXACT_CHUNK * 4     # pre-streaming scan temp
+    streaming = _temp_bytes(
+        lambda data, dnear: engine.exact_build_means(be, data, dnear,
+                                                     metric="l2"), x, dn)
+    assert streaming < block // 10
+
+
+# ---------------------------------------------------------------------------
+# Tile tuner
+# ---------------------------------------------------------------------------
+
+def test_tuner_heuristic_and_ledger():
+    tuning.clear_ledger()
+    try:
+        base = tuning.resolve_tile_config(4096, 128, 8, device_kind="tpu",
+                                          backend="pallas")
+        assert base.tb == tuning.REF_TILE == engine._EXACT_CHUNK
+        cands = list(tuning.candidates(4096, 128, 8, device_kind="tpu",
+                                       backend="pallas"))
+        assert base in cands and len(cands) > 1
+        other = next(c for c in cands if c != base)
+        # a faster measurement flips the resolution to the observed config
+        tuning.observe(4096, 128, 8, base, {"build": 2.0, "swap": 2.0},
+                       device_kind="tpu", backend="pallas")
+        tuning.observe(4096, 128, 8, other, {"build": 0.5, "swap": 0.5},
+                       device_kind="tpu", backend="pallas")
+        got = tuning.resolve_tile_config(4096, 128, 8, device_kind="tpu",
+                                         backend="pallas")
+        assert got == other
+        # shape buckets: a nearby n resolves through the same key
+        assert tuning.resolve_tile_config(4097, 128, 8, device_kind="tpu",
+                                          backend="pallas") != other
+        snap = tuning.ledger_snapshot()
+        assert any(other in v for v in snap.values())
+    finally:
+        tuning.clear_ledger()
+
+
+def test_tuner_cpu_pallas_floor():
+    cfg = tuning.resolve_tile_config(100_000, 784, 10, device_kind="cpu",
+                                     backend="pallas")
+    assert cfg.tm == 128 and cfg.tb == tuning.REF_TILE
