@@ -56,7 +56,7 @@ def sweep(n=None, k=5, metric="l2", reps=REPS, solvers=SOLVERS):
                           "fused": fused}
                 walls, reports = [], []
                 for _ in range(max(3, int(reps))):
-                    est, wall = timed(lambda: KMedoids(
+                    est, wall = timed(lambda s=s, params=params: KMedoids(
                         k, solver=s, metric=metric, seed=0,
                         **params).fit(data))
                     walls.append(wall)

@@ -28,12 +28,13 @@ def run():
         tb = 0.0
         for rep in range(reps):
             data = datasets.mnist_like(n, seed=100 + rep)
-            p, tp = timed(lambda: KMedoids(k, solver="fastpam1",
-                                           metric="l2").fit(data))
+            p, tp = timed(lambda data=data: KMedoids(k, solver="fastpam1",
+                                                     metric="l2").fit(data))
             for s in SOLVERS:
                 params = {**default_params(s), **BENCH_EXTRA.get(s, {})}
-                r, tr = timed(lambda: KMedoids(k, solver=s, metric="l2",
-                                               seed=rep, **params).fit(data))
+                r, tr = timed(lambda s=s, rep=rep, params=params, data=data:
+                              KMedoids(k, solver=s, metric="l2",
+                                       seed=rep, **params).fit(data))
                 if s == "banditpam":
                     tb = tr
                 ratios[s].append(r.loss_ / p.loss_)

@@ -61,7 +61,7 @@ def sweep(batch=B, n=N, k=K, metric="l2", reps=REPS, solvers=SOLVERS):
 
         walls_loop, walls_batch = [], []
         for _ in range(max(3, int(reps))):
-            singles, wall = timed(lambda: [
+            singles, wall = timed(lambda s=s, params=params: [
                 KMedoids(k, solver=s, metric=metric, seed=sd, **params
                          ).fit(Xs[i]).report_
                 for i, sd in enumerate(seeds)])

@@ -48,9 +48,10 @@ def run():
             for n in sizes:
                 solver, kw = _modes(n)[mode]
                 data = datasets.make(ds, n, seed=7)
-                est, wall = timed(lambda: KMedoids(k, solver=solver,
-                                                   metric=metric, seed=0,
-                                                   **kw).fit(data))
+                est, wall = timed(
+                    lambda k=k, solver=solver, metric=metric, kw=kw, data=data:
+                    KMedoids(k, solver=solver, metric=metric, seed=0,
+                             **kw).fit(data))
                 b = est.report_
                 iters = k + b.n_swaps + 1
                 evs.append(b.distance_evals / iters)

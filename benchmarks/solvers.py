@@ -20,8 +20,9 @@ def sweep(n=None, k=5, metric="l2", solvers=None):
     rows = {}
     for s in solvers or available_solvers():
         params = {**default_params(s), **BENCH_EXTRA.get(s, {})}
-        est, wall = timed(lambda: KMedoids(k, solver=s, metric=metric, seed=0,
-                                           **params).fit(data))
+        est, wall = timed(lambda s=s, params=params:
+                          KMedoids(k, solver=s, metric=metric, seed=0,
+                                   **params).fit(data))
         r = est.report_
         rows[s] = {
             "loss": float(r.loss),

@@ -17,8 +17,9 @@ def run():
         evs = []
         for n in sizes:
             data = datasets.make(ds, n, seed=11)
-            b, wall = timed(lambda: BanditPAM(k, metric, seed=0,
-                                              baseline="leader").fit(data))
+            b, wall = timed(lambda metric=metric, data=data:
+                            BanditPAM(k, metric, seed=0,
+                                      baseline="leader").fit(data))
             iters = k + b.n_swaps + 1
             evs.append(b.distance_evals / iters)
             emit(f"appfig5_{ds}_n{n}", wall * 1e6,

@@ -1,0 +1,20 @@
+"""tracecheck — static + runtime enforcement of the engine's contracts.
+
+Two halves:
+
+* **Static** (stdlib-only, no jax import): the AST rule engine
+  (:mod:`.engine`, :mod:`.rules`, :mod:`.config`) and the import-graph
+  report (:mod:`.imports`), driven by ``python -m repro.analysis``.
+* **Runtime** (:mod:`.guard`): ``host_read``/``host_stage`` sanctioned
+  transfer points re-exported from :mod:`repro.core.engine`, plus the
+  pytest fixtures that run fits under ``jax.transfer_guard("disallow")``
+  and assert the one-dispatch-per-phase ledger.
+
+Rule catalogue and suppression policy: docs/design.md #9.
+"""
+
+from .config import Config, default_config
+from .engine import Finding, Report, analyze_file, run
+
+__all__ = ["Config", "default_config", "Finding", "Report",
+           "analyze_file", "run"]

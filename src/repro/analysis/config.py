@@ -1,0 +1,179 @@
+"""tracecheck configuration — the repo contract, as data.
+
+One :class:`Config` instance describes which rule applies where
+(per-directory scopes), which functions are sanctioned RNG-chain heads,
+which modules are deliberately quarantined LM scaffolding, and the small
+set of repo-specific analysis hints (extra trace-taking callables, files
+whose whole public surface is jit-reachable).  ``default_config()``
+encodes the shipped tree's contracts; tests build narrower configs for
+the fixture corpus, and out-of-tree users can construct their own.
+
+The scope patterns are directory/file suffixes matched against posix
+paths: ``"core/"`` matches any file under a ``core`` directory component
+(so the fixture corpus at ``tests/fixtures/tracecheck/bad/core/`` lands
+in the same scopes as ``src/repro/core/``), ``"core/banditpam.py"``
+matches that file wherever its tree is rooted, and ``"*"`` matches
+everything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+__all__ = ["Config", "default_config", "path_in_scope", "LM_QUARANTINE"]
+
+
+def path_in_scope(path: str, patterns: Tuple[str, ...]) -> bool:
+    """True if ``path`` (posix-ish) matches any scope pattern."""
+    p = "/" + path.replace("\\", "/").lstrip("/")
+    for pat in patterns:
+        if pat == "*":
+            return True
+        if pat.endswith("/"):
+            if ("/" + pat) in (p + "/"):
+                return True
+        elif p.endswith("/" + pat):
+            return True
+    return False
+
+
+# Modules that are deliberately retained although the clustering product
+# surface never imports them: the LM training/serving scaffolding the
+# k-medoids engine grew alongside (docs/design.md Part B).  They are
+# reachable only from their dedicated tests/examples ("test-only" in the
+# import report).  Anything ELSE that turns up dormant is an error — the
+# quarantine list is exhaustive by design, mirroring the PR-7
+# ``serve/lm.py`` precedent of explicit, documented quarantine.
+LM_QUARANTINE: Tuple[str, ...] = (
+    "repro.configs",
+    "repro.configs.arctic_480b",
+    "repro.configs.base",
+    "repro.configs.falcon_mamba_7b",
+    "repro.configs.gemma3_12b",
+    "repro.configs.granite_8b",
+    "repro.configs.llama4_scout_17b",
+    "repro.configs.mistral_nemo_12b",
+    "repro.configs.musicgen_large",
+    "repro.configs.phi3_vision_4_2b",
+    "repro.configs.qwen3_1_7b",
+    "repro.configs.zamba2_2_7b",
+    "repro.distributed",
+    "repro.distributed.compression",
+    "repro.distributed.pipeline",
+    "repro.distributed.sharding",
+    "repro.launch.dryrun",
+    "repro.launch.mesh",
+    "repro.launch.serve",
+    "repro.launch.specs",
+    "repro.launch.train",
+    "repro.models",
+    "repro.models.layers",
+    "repro.models.model",
+    "repro.models.moe",
+    "repro.models.ssm",
+    "repro.runtime.elastic",
+    "repro.runtime.fault",
+    "repro.serve.lm",
+    "repro.train",
+    "repro.train.compressed",
+    "repro.train.data",
+    "repro.train.optimizer",
+    "repro.train.train_step",
+)
+
+
+@dataclasses.dataclass
+class Config:
+    """Rule scopes + repo-specific analysis hints (see module docstring)."""
+
+    # rule id -> path patterns the rule runs on
+    scopes: Dict[str, Tuple[str, ...]] = dataclasses.field(
+        default_factory=dict)
+    # path patterns skipped entirely
+    exclude: Tuple[str, ...] = ("__pycache__/",)
+
+    # TRC003: qualified function names allowed to construct raw PRNGKeys
+    # (the heads of the documented (seed, phase, selection, round, shard)
+    # fold_in chains — everything else must derive keys by fold_in/split).
+    sanctioned_key_constructors: Tuple[str, ...] = ()
+
+    # Callables (simple names) whose function-valued arguments are traced
+    # — beyond the jax.jit/lax.* builtins the engine already knows.
+    extra_trace_takers: Tuple[str, ...] = ()
+
+    # Files whose module-level functions are ALL jit-reachable public
+    # surface (the Pallas kernel wrappers: called inside jit from other
+    # modules, so per-module root detection cannot see their callers).
+    all_roots_paths: Tuple[str, ...] = ()
+    # ...except these qualified names (host-side deployment hooks).
+    host_boundary: Tuple[str, ...] = ()
+
+    # TRC005 sub-scopes (the rule id shares one suppression token).
+    trc005_vmap: Tuple[str, ...] = ()
+    trc005_setinf: Tuple[str, ...] = ()
+    trc005_f32: Tuple[str, ...] = ()
+
+    # Import-graph report: product roots + documented dormant modules.
+    product_roots: Tuple[str, ...] = ()
+    quarantine: Tuple[str, ...] = ()
+
+    def rule_scope(self, rule_id: str) -> Tuple[str, ...]:
+        return self.scopes.get(rule_id, ())
+
+
+def default_config() -> Config:
+    """The shipped repo contract (rule catalogue in docs/design.md #9)."""
+    return Config(
+        scopes={
+            # Host-sync calls on traced values in jit-reachable engine code.
+            "TRC001": ("core/", "kernels/"),
+            # Python for/while unrolling into a jit trace.
+            "TRC002": ("core/", "kernels/"),
+            # Raw PRNGKeys outside the sanctioned fold_in chain heads.
+            "TRC003": ("core/", "kernels/", "serve/"),
+            # Collectives inside StatsBackend implementations (anywhere).
+            "TRC004": ("*",),
+            # Parity breakers (union of the sub-scopes below).
+            "TRC005": ("core/banditpam.py", "core/engine.py", "kernels/",
+                       "serve/drift.py", "runtime/checkpoint.py"),
+        },
+        sanctioned_key_constructors=(
+            # single-device driver: the one chain head per fit
+            "BanditPAM.fit",
+            # batched multi-fit: replicates the fit chain, vmapped
+            "_batch_rng_chains.chain",
+            # sharded driver: (seed ^ phase_tag) chain head + fit entry
+            "_phase_key",
+            "DistributedBanditPAM.fit",
+            # onebatch solver: one chain head per solve
+            "onebatchpam",
+            # serving reservoir: one fixed key, draws fold_in(stream idx)
+            "Reservoir.__init__",
+        ),
+        extra_trace_takers=(
+            # adaptive_search traces its stats_fn/exact_fn/count_fn args
+            "adaptive_search",
+            # shard_map closures execute inside jit
+            "shard_map", "_shard_map",
+        ),
+        all_roots_paths=("kernels/",),
+        host_boundary=(
+            # TPU deployment hook: re-registers metrics, pure host code
+            "install",
+            # interpret-mode default probe, called at wrapper entry
+            "_default_interpret",
+        ),
+        trc005_vmap=("core/banditpam.py",),
+        trc005_setinf=("core/engine.py", "kernels/"),
+        trc005_f32=("serve/drift.py", "runtime/checkpoint.py"),
+        product_roots=(
+            "repro.api", "repro.serve",
+            # analysis entry points beyond the package __init__: the CLI
+            # and the pytest guard plugin are imported by name, not via
+            # the package front.
+            "repro.analysis", "repro.analysis.__main__",
+            "repro.analysis.guard", "repro.analysis.imports",
+        ),
+        quarantine=LM_QUARANTINE,
+    )

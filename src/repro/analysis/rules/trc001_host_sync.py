@@ -1,0 +1,59 @@
+"""TRC001 — host-sync calls on traced values in jit-reachable code.
+
+``.item()``, ``float()/int()/bool()`` and ``np.asarray()/np.array()``
+force a device→host transfer; inside a traced function they either fail
+at trace time or (worse, via weak-typing edge cases) silently sink the
+value to host and break the one-dispatch-per-phase discipline.  Host
+orchestration code (``fit`` drivers) is not jit-reachable and may sync
+freely — the sanctioned read points are ``engine.host_read`` /
+``engine.host_stage``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..engine import Finding, ModuleContext
+
+_BUILTIN_SYNCS = ("float", "int", "bool", "complex")
+_NUMPY_SYNCS = ("numpy.asarray", "numpy.array", "numpy.copy")
+
+
+class TRC001:
+    rule_id = "TRC001"
+    title = ("host-sync call (.item()/float()/bool()/np.asarray) inside a "
+             "jit-reachable function")
+
+    def check(self, ctx: ModuleContext, config) -> List[Finding]:
+        out: List[Finding] = []
+        for info in ctx.reachable_functions():
+            for node in ctx.walk_own(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = node.func
+                if (isinstance(f, ast.Attribute) and f.attr == "item"
+                        and not node.args and not node.keywords):
+                    out.append(ctx.finding(
+                        self.rule_id, node,
+                        ".item() forces a device→host sync under the trace; "
+                        "keep the value on device or read it via "
+                        "engine.host_read at the phase boundary",
+                        info.qualname))
+                    continue
+                r = ctx.resolve(f)
+                if r in _NUMPY_SYNCS:
+                    out.append(ctx.finding(
+                        self.rule_id, node,
+                        f"{r}() on a traced value falls back to host numpy; "
+                        "use jnp inside traced code and engine.host_read at "
+                        "the boundary", info.qualname))
+                elif (isinstance(f, ast.Name) and f.id in _BUILTIN_SYNCS
+                      and r == f.id and node.args
+                      and not isinstance(node.args[0], ast.Constant)):
+                    out.append(ctx.finding(
+                        self.rule_id, node,
+                        f"{f.id}() on a traced value is a concretization "
+                        "sync; keep scalars as 0-d arrays on device",
+                        info.qualname))
+        return out

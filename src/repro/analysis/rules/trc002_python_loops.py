@@ -1,0 +1,35 @@
+"""TRC002 — Python ``for``/``while`` inside jit-reachable code.
+
+A Python loop under a trace unrolls into the jit program: compile time
+scales with the trip count, data-dependent bounds fail outright, and
+the engine's contract (docs/design.md #1/#5) is
+``lax.fori_loop``/``while_loop``/``scan``.  Trace-constant unrolls
+(static chunking over shapes, fixed-depth RNG chain folds) are the
+legitimate exception and must be suppressed with a justification.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..engine import Finding, ModuleContext
+
+
+class TRC002:
+    rule_id = "TRC002"
+    title = "Python for/while loop unrolled inside a jit-reachable function"
+
+    def check(self, ctx: ModuleContext, config) -> List[Finding]:
+        out: List[Finding] = []
+        for info in ctx.reachable_functions():
+            for node in ctx.walk_own(info.node):
+                if isinstance(node, (ast.For, ast.AsyncFor, ast.While)):
+                    kind = "while" if isinstance(node, ast.While) else "for"
+                    out.append(ctx.finding(
+                        self.rule_id, node,
+                        f"Python `{kind}` unrolls into the jit trace; the "
+                        "engine contract is lax.fori_loop/while_loop/scan "
+                        "(suppress only for trace-constant unrolls, with a "
+                        "justification)", info.qualname))
+        return out

@@ -1,0 +1,61 @@
+"""TRC003 — raw PRNGKeys outside the sanctioned fold_in chain heads.
+
+Every random draw in the engine must derive its key through the
+documented ``(seed, phase, selection, round, shard)`` ``fold_in`` chain.
+A raw ``jax.random.PRNGKey(...)`` anywhere else is exactly the shape of
+the PR-4 sharded round-collision bug: a draw keyed on local state
+(there, ``ref_idx[0]``) that ignored the round counter, so different
+rounds silently reused reference subsets.  The chain heads — one per
+driver — are listed in ``Config.sanctioned_key_constructors``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..engine import Finding, ModuleContext
+
+_KEY_CONSTRUCTORS = ("jax.random.PRNGKey", "jax.random.key")
+# Derivations that keep a chain a chain — not draws.
+_CHAIN_OPS = ("jax.random.fold_in", "jax.random.split",
+              "jax.random.clone", "jax.random.wrap_key_data")
+
+
+class TRC003:
+    rule_id = "TRC003"
+    title = "raw PRNGKey outside the sanctioned fold_in chain constructors"
+
+    @staticmethod
+    def _sanctioned(qualname: str, config) -> bool:
+        for s in config.sanctioned_key_constructors:
+            if qualname == s or qualname.endswith("." + s):
+                return True
+        return False
+
+    def check(self, ctx: ModuleContext, config) -> List[Finding]:
+        out: List[Finding] = []
+        for node, scope in ctx.walk_scoped():
+            if not isinstance(node, ast.Call):
+                continue
+            r = ctx.resolve(node.func)
+            if r in _KEY_CONSTRUCTORS:
+                if not self._sanctioned(scope, config):
+                    where = scope or "<module>"
+                    out.append(ctx.finding(
+                        self.rule_id, node,
+                        f"raw {r}() in `{where}`, which is not a sanctioned "
+                        "chain constructor — derive keys via fold_in/split "
+                        "from the (seed, phase, selection, round, shard) "
+                        "chain (PR-4 round-collision bug shape)", scope))
+            elif (r and r.startswith("jax.random.")
+                  and r not in _KEY_CONSTRUCTORS + _CHAIN_OPS):
+                key_arg = node.args[0] if node.args else None
+                if (isinstance(key_arg, ast.Call)
+                        and ctx.resolve(key_arg.func) in _KEY_CONSTRUCTORS):
+                    out.append(ctx.finding(
+                        self.rule_id, node,
+                        f"{r}() keyed on a fresh PRNGKey — the draw ignores "
+                        "the fold_in chain, so distinct call sites/rounds "
+                        "can silently collide", scope))
+        return out

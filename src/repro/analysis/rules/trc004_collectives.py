@@ -1,0 +1,57 @@
+"""TRC004 — collectives inside ``StatsBackend`` implementations.
+
+The StatsBackend contract (core/engine.py) is *collective-free*: a
+backend computes per-shard partial sums and the distributed layer owns
+the single ``psum`` composition point.  A collective inside a backend
+would double-reduce under ``shard_map``, silently diverge the sharded
+ledger from the local one, and break single-device fits outside any
+mesh.  The rule fires on any ``jax.lax`` collective lexically inside a
+class whose name (or base class name) ends in ``StatsBackend``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..engine import Finding, ModuleContext
+
+_COLLECTIVES = (
+    "jax.lax.psum", "jax.lax.pmean", "jax.lax.pmax", "jax.lax.pmin",
+    "jax.lax.all_gather", "jax.lax.all_to_all", "jax.lax.ppermute",
+    "jax.lax.pshuffle", "jax.lax.psum_scatter", "jax.lax.axis_index",
+)
+
+
+class TRC004:
+    rule_id = "TRC004"
+    title = "collective (psum/pmean/all_gather/...) inside a StatsBackend"
+
+    @staticmethod
+    def _is_backend_class(node: ast.ClassDef, ctx: ModuleContext) -> bool:
+        if node.name.endswith("StatsBackend"):
+            return True
+        for base in node.bases:
+            r = ctx.resolve(base)
+            if r and r.rsplit(".", 1)[-1].endswith("StatsBackend"):
+                return True
+        return False
+
+    def check(self, ctx: ModuleContext, config) -> List[Finding]:
+        out: List[Finding] = []
+        for cls in ast.walk(ctx.tree):
+            if not (isinstance(cls, ast.ClassDef)
+                    and self._is_backend_class(cls, ctx)):
+                continue
+            for node in ast.walk(cls):
+                if not isinstance(node, ast.Call):
+                    continue
+                r = ctx.resolve(node.func)
+                if r in _COLLECTIVES:
+                    out.append(ctx.finding(
+                        self.rule_id, node,
+                        f"{r}() inside StatsBackend `{cls.name}` — backends "
+                        "are collective-free by contract; the distributed "
+                        "layer owns the single psum composition point",
+                        cls.name))
+        return out

@@ -1,0 +1,122 @@
+"""TRC005 — bit-parity breakers, three sub-checks with their own scopes.
+
+* ``vmap`` in the batch drivers (``core/banditpam.py``): the PR-6
+  multi-fit contract is ``lax.map`` lanes that replay the single-fit
+  HLO bit-for-bit; ``vmap`` re-vectorizes reductions and changes
+  accumulation order.  (The threefry RNG helpers are the documented,
+  suppressed exception — key derivation is bit-stable under vmap.)
+* ``.at[...].set(inf)`` masking on streaming paths
+  (``core/engine.py``, ``kernels/``): the PR-8 megakernel replaced
+  materialize-then-mask top-2 with online (min, min2) accumulation;
+  an ``at[].set(inf)`` copy resurrects the O(n·b) temp the peak-temp
+  gate bans, and the copy's schedule is not tile-order pinned.
+* f64→f32 casts in host accounting (``serve/drift.py``,
+  ``runtime/checkpoint.py``): drift statistics and checkpoint leaf
+  round-trips are contractually f64/bit-exact; a stray ``float32``
+  constructor or dtype-less ``jnp.asarray`` silently rounds them.
+
+All three report as TRC005 and share the suppression token.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..config import path_in_scope
+from ..engine import Finding, ModuleContext
+
+_INF_NAMES = ("jax.numpy.inf", "numpy.inf", "math.inf")
+_F32_CONSTRUCTORS = ("numpy.float32", "jax.numpy.float32")
+_DTYPELESS_CONVERTERS = ("jax.numpy.asarray", "jax.numpy.array")
+
+
+def _is_inf(node: ast.AST, ctx: ModuleContext) -> bool:
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        return ctx.resolve(node) in _INF_NAMES
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        if (ctx.resolve(node.func) == "float" and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and node.args[0].value == "inf"):
+            return True
+    return False
+
+
+class TRC005:
+    rule_id = "TRC005"
+    title = "bit-parity breaker (vmap batch lane / at[].set(inf) / f32 cast)"
+
+    def check(self, ctx: ModuleContext, config) -> List[Finding]:
+        out: List[Finding] = []
+        if path_in_scope(ctx.path, config.trc005_vmap):
+            out.extend(self._check_vmap(ctx))
+        if path_in_scope(ctx.path, config.trc005_setinf):
+            out.extend(self._check_setinf(ctx))
+        if path_in_scope(ctx.path, config.trc005_f32):
+            out.extend(self._check_f32(ctx))
+        return out
+
+    def _check_vmap(self, ctx: ModuleContext) -> List[Finding]:
+        out = []
+        for node, scope in ctx.walk_scoped():
+            if isinstance(node, ast.Call) and ctx.resolve(
+                    node.func) == "jax.vmap":
+                out.append(ctx.finding(
+                    self.rule_id, node,
+                    "jax.vmap in a batch driver — the multi-fit parity "
+                    "contract is lax.map lanes replaying the single-fit "
+                    "HLO (docs/design.md #6); vmap changes reduction "
+                    "order", scope))
+        return out
+
+    def _check_setinf(self, ctx: ModuleContext) -> List[Finding]:
+        out = []
+        for node, scope in ctx.walk_scoped():
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "set"
+                    and isinstance(node.func.value, ast.Subscript)
+                    and isinstance(node.func.value.value, ast.Attribute)
+                    and node.func.value.value.attr == "at"):
+                continue
+            if node.args and _is_inf(node.args[0], ctx):
+                out.append(ctx.finding(
+                    self.rule_id, node,
+                    ".at[...].set(inf) masking materializes a full copy on "
+                    "a streaming path — use online (min, min2) accumulation "
+                    "or a where-mask inside the tile walk "
+                    "(docs/design.md #8)", scope))
+        return out
+
+    def _check_f32(self, ctx: ModuleContext) -> List[Finding]:
+        out = []
+        for node, scope in ctx.walk_scoped():
+            if not isinstance(node, ast.Call):
+                continue
+            r = ctx.resolve(node.func)
+            if r in _F32_CONSTRUCTORS:
+                out.append(ctx.finding(
+                    self.rule_id, node,
+                    f"{r}() in an f64 host-accounting module silently "
+                    "rounds drift/checkpoint state to f32", scope))
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "astype" and node.args):
+                a = node.args[0]
+                tgt = ctx.resolve(a) if isinstance(
+                    a, (ast.Name, ast.Attribute)) else (
+                        a.value if isinstance(a, ast.Constant) else None)
+                if tgt in _F32_CONSTRUCTORS + ("float32",):
+                    out.append(ctx.finding(
+                        self.rule_id, node,
+                        ".astype(float32) in an f64 host-accounting module "
+                        "silently rounds drift/checkpoint state", scope))
+            elif r in _DTYPELESS_CONVERTERS:
+                has_dtype = len(node.args) > 1 or any(
+                    kw.arg == "dtype" for kw in node.keywords)
+                if not has_dtype:
+                    out.append(ctx.finding(
+                        self.rule_id, node,
+                        f"dtype-less {r}() in an f64 host-accounting module "
+                        "casts float64 host state to the default f32 — pass "
+                        "an explicit dtype", scope))
+        return out

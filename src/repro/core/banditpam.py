@@ -82,9 +82,9 @@ from .distances import get_metric
 from .engine import (_EXACT_CHUNK, _build_g, _ref_chunks, _swap_batch_stats,
                      _swap_terms, FitContext, cache_read_or_write,
                      counted_dispatch, exact_build_means, exact_swap_means,
-                     get_stats_backend, medoid_cache, observe_tiles,
-                     resolve_stats_backend, resolve_tile_config, stream_columns,
-                     total_loss)
+                     get_stats_backend, host_read, host_stage, medoid_cache,
+                     observe_tiles, resolve_stats_backend,
+                     resolve_tile_config, stream_columns, total_loss)
 from .pic_cache import (PicCache, carry_valid, fresh_positions, make_cache,
                         resolve_batch_cache_rounds, resolve_cache_rounds)
 from .report import BatchFitReport, FitReport
@@ -456,10 +456,16 @@ def _swap_iter(data, medoids, med_mask, key, cache, dwarm, perm, perm_idx,
     accept = new_loss < prev_loss - 1e-7 * jnp.maximum(1.0,
                                                        jnp.abs(prev_loss))
     new_carry = (sr.sums, sr.sqsums, sr.rounds, d1, d2, assign)
+    # The displaced medoid and the accepted-state mask are produced IN
+    # TRACE so the host driver never does eager index arithmetic on
+    # device arrays (which would be implicit transfers under the
+    # transfer guard); the driver just selects cand/new_mask on accept.
+    old_med = medoids[m_idx]
+    new_mask = med_mask.at[old_med].set(False).at[x_idx].set(True)
     # fresh is a POSITION count and n_changed a point count under "pic";
     # the host driver multiplies both by n (uint32-safe).
-    return (sr.best, new_loss, cand, new_carry, cache2, fresh,
-            sr.n_evals_cached, n_changed, sr.used_exact, accept)
+    return (sr.best, new_loss, cand, new_mask, old_med, new_carry, cache2,
+            fresh, sr.n_evals_cached, n_changed, sr.used_exact, accept)
 
 
 _swap_iter_jit = jax.jit(
@@ -564,18 +570,16 @@ def _swap_batch(data, medoids, med_mask, subkeys, cache, pidx_c, pw_c,
             (t, done, meds, mask, loss, carry, cc, fresh_s, cached_s,
              nchg_s, exact_s, old_a, new_a, loss_a, acc_a) = st
             pidx_t = spidx_i if spidx_i.ndim == 1 else spidx_i[t]
-            (best, new_loss, cand, new_carry, cc2, fresh, cached, nchg,
-             uexact, accept) = _swap_iter(
+            (best, new_loss, cand, new_mask, old, new_carry, cc2, fresh,
+             cached, nchg, uexact, accept) = _swap_iter(
                  data_i, meds, mask, keys_i[t], cc, None, None, pidx_i,
                  pw_i, carry, loss, pidx_t, spw_i, valid_i, nv_i, lt_i,
                  backend=backend, metric=metric, batch_size=batch_size,
                  delta=delta, k=k, sampling=sampling, baseline=baseline,
                  early_stop=early_stop, mode=mode, free_rounds=free_rounds)
             x_idx = best % n
-            old = meds[best // n]
             meds2 = jnp.where(accept, cand, meds)
-            mask2 = jnp.where(
-                accept, mask.at[old].set(False).at[x_idx].set(True), mask)
+            mask2 = jnp.where(accept, new_mask, mask)
             return (t + 1, jnp.logical_not(accept), meds2, mask2,
                     jnp.where(accept, new_loss, loss),
                     new_carry if pic else None, cc2,
@@ -612,13 +616,21 @@ def _batch_rng_chains(seeds, *, k: int, T: int):
         key = jax.random.PRNGKey(seed)
         key, ckey = jax.random.split(key)
         subs = []
+        # tracecheck: ignore[TRC002] -- trace-constant unroll: k + T is a
+        # static fit-shape bound, and the chain must replay the sequential
+        # split order of the single-fit driver bit-for-bit.
         for _ in range(k + T):
             key, sub = jax.random.split(key)
             subs.append(sub)
         subs = jnp.stack(subs)
+        # tracecheck: ignore[TRC005] -- vmap over key *derivation* only:
+        # threefry split/fold_in are elementwise, so the vmapped bits equal
+        # the sequential ones; no float reductions are vectorized here.
         pkeys = jax.vmap(lambda s: jax.random.split(s)[1])(subs)
         return ckey, subs[:k], subs[k:], pkeys[:k], pkeys[k:]
 
+    # tracecheck: ignore[TRC005] -- same key-derivation exemption as above:
+    # per-fit chains are integer threefry lanes, bit-stable under vmap.
     return jax.vmap(chain)(seeds)
 
 
@@ -626,6 +638,9 @@ def _batch_rng_chains(seeds, *, k: int, T: int):
 def _batch_perms(keys, *, n: int):
     """[m, 2] keys -> [m, n] reference permutations, one dispatch (the
     vmapped sort matches ``jax.random.permutation`` row-for-row)."""
+    # tracecheck: ignore[TRC005] -- vmapped argsort of per-row random bits:
+    # each row's permutation matches jax.random.permutation(s, n) exactly
+    # (locked by test_multifit bit-parity), no float accumulation involved.
     return jax.vmap(
         lambda s: jax.random.permutation(s, n).astype(jnp.int32))(keys)
 
@@ -752,6 +767,10 @@ class BanditPAM:
              cached_a) = phase(data, subkeys, ctx.cache, ctx.dwarm,
                                ctx.perm, k=self.k, **kw)
             ctx.cache = cache
+            # One explicit ledger read for the whole phase — the fused
+            # BUILD stays a single dispatch plus a single device_get.
+            rounds_a, evals_a, cached_a = host_read(
+                (rounds_a, evals_a, cached_a))
         else:
             # Stepped baseline: one dispatch + one host sync per medoid.
             step = counted_dispatch(_build_step_jit,
@@ -799,7 +818,11 @@ class BanditPAM:
                  else 1.0 / (1000.0 * self.k * n))
         swap_evals = 0
         swap_cached = 0
-        loss = float(total_loss(data, medoids, metric=self.metric))
+        # The running loss stays DEVICE-resident between iterations
+        # (prev_loss_d feeds the next step's accept rule without a
+        # host→device re-upload); the host mirror only serves the report.
+        prev_loss_d = total_loss(data, medoids, metric=self.metric)
+        loss = float(host_read(prev_loss_d))
         converged = False
         carry = None  # (sums, sqsums, rounds, d1, d2, assign) of last search
         kw = dict(backend=ctx.backend, metric=self.metric,
@@ -812,32 +835,42 @@ class BanditPAM:
             res.dispatches_by_phase, "swap")
         for _ in range(self.max_swaps):
             key, sub = jax.random.split(key)
-            (best, new_loss_d, cand, new_carry, cache, fresh, cached,
-             n_changed, used_exact, accept) = step(
+            (best, new_loss_d, cand, new_mask, old_med, new_carry, cache,
+             fresh, cached, n_changed, used_exact, accept) = step(
                  data, medoids, med_mask, sub, ctx.cache, ctx.dwarm,
                  ctx.perm, ctx.perm_idx, ctx.perm_w, carry,
-                 jnp.float32(loss), **kw)
+                 prev_loss_d, **kw)
             ctx.cache = cache
+            # ONE explicit host read per iteration: every ledger counter,
+            # the displaced medoid and the accept bit come back in a
+            # single device_get, so the loop is one dispatch + one
+            # sanctioned read under the transfer guard.
+            (best_h, new_loss_h, old_h, fresh_h, cached_h, n_changed_h,
+             used_exact_h, accept_h) = host_read(
+                 (best, new_loss_d, old_med, fresh, cached, n_changed,
+                  used_exact, accept))
             # Under "pic", fresh counts POSITIONS and n_changed counts
             # repaired points; the n· multiplies run on host ints so the
             # ledger cannot wrap at large n.
             scale = n if ctx.mode == "pic" else 1
-            swap_evals += 2 * n * self.k + scale * int(fresh)
-            swap_cached += int(cached) + n * int(n_changed)
-            res.swap_exact_fallbacks += int(used_exact)
+            swap_evals += 2 * n * self.k + scale * int(fresh_h)
+            swap_cached += int(cached_h) + n * int(n_changed_h)
+            res.swap_exact_fallbacks += int(used_exact_h)
             if ctx.mode == "pic":
                 carry = new_carry
             # The accept rule is evaluated ON DEVICE in f32 (inside
             # _swap_iter) — the same comparison every fit_batch lane
             # makes — so the two drivers cannot diverge at fp margins.
-            if bool(accept):
-                new_loss = float(new_loss_d)
-                m_idx, x_idx = divmod(int(best), n)
-                old = int(medoids[m_idx])
+            # On accept the driver only SELECTS the in-trace results
+            # (cand/new_mask); the running loss stays device-resident.
+            if bool(accept_h):
+                x_idx = int(best_h) % n
                 medoids = cand
-                med_mask = med_mask.at[old].set(False).at[x_idx].set(True)
-                res.swap_history.append((old, x_idx, new_loss))
-                loss = new_loss
+                med_mask = new_mask
+                res.swap_history.append((int(old_h), x_idx,
+                                         float(new_loss_h)))
+                loss = float(new_loss_h)
+                prev_loss_d = new_loss_d
             else:
                 converged = True
                 break
@@ -894,9 +927,11 @@ class BanditPAM:
         accept = new_loss < prev_loss - 1e-7 * jnp.maximum(
             1.0, jnp.abs(prev_loss))
         new_carry = (sr.sums, sr.sqsums, sr.rounds, d1, d2, assign)
-        return (int(sr.best), new_loss, cand, new_carry, cache2, fresh,
-                int(sr.n_evals_cached), n_changed, int(sr.used_exact),
-                accept)
+        old_med = medoids[m_idx]
+        new_mask = med_mask.at[old_med].set(False).at[x_idx].set(True)
+        return (int(sr.best), new_loss, cand, new_mask, old_med, new_carry,
+                cache2, fresh, int(sr.n_evals_cached), n_changed,
+                int(sr.used_exact), accept)
 
     # -- public ----------------------------------------------------------
     def fit(self, data, warm_start=None) -> FitResult:
@@ -911,30 +946,33 @@ class BanditPAM:
         deterministic given (seed, warm_start) but intentionally distinct
         from the cold fit's chain.
         """
-        data = jnp.asarray(data, jnp.float32)
+        with host_stage("fit staging: input upload"):
+            data = jnp.asarray(data, jnp.float32)
         n = data.shape[0]
         if n <= self.k:
             raise ValueError("need n > k")
         backend = resolve_stats_backend(self.backend, self.metric)
-        key = jax.random.PRNGKey(self.seed)
         res = FitResult(medoids=np.zeros(self.k, np.int64), loss=np.inf,
                         n_swaps=0, converged=False, distance_evals=0)
-        key, ckey = jax.random.split(key)
-        ctx = self._make_context(data, ckey, backend, res)
-        if warm_start is not None:
-            ws = np.asarray(warm_start, np.int64).ravel()
-            if ws.shape[0] != self.k or len(set(ws.tolist())) != self.k:
-                raise ValueError(
-                    f"warm_start must be {self.k} distinct medoid "
-                    f"indices, got {ws.tolist()}")
-            if ws.min() < 0 or ws.max() >= n:
-                raise ValueError(f"warm_start indices out of range "
-                                 f"[0, {n})")
-            ctx.warm_medoids = jnp.asarray(ws, jnp.int32)
+        with host_stage("fit staging: RNG chain head + context upload"):
+            key = jax.random.PRNGKey(self.seed)
+            key, ckey = jax.random.split(key)
+            ctx = self._make_context(data, ckey, backend, res)
+            if warm_start is not None:
+                ws = np.asarray(warm_start, np.int64).ravel()
+                if ws.shape[0] != self.k or len(set(ws.tolist())) != self.k:
+                    raise ValueError(
+                        f"warm_start must be {self.k} distinct medoid "
+                        f"indices, got {ws.tolist()}")
+                if ws.min() < 0 or ws.max() >= n:
+                    raise ValueError(f"warm_start indices out of range "
+                                     f"[0, {n})")
+                ctx.warm_medoids = jnp.asarray(ws, jnp.int32)
         t0 = time.perf_counter()
         if ctx.warm_medoids is not None:
             medoids = ctx.warm_medoids
-            med_mask = jnp.zeros((n,), jnp.bool_).at[medoids].set(True)
+            with host_stage("warm-start staging: medoid mask upload"):
+                med_mask = jnp.zeros((n,), jnp.bool_).at[medoids].set(True)
             res.evals_by_phase["build"] = 0
         else:
             medoids, med_mask, key = self._build(data, key, ctx, res)
@@ -944,7 +982,7 @@ class BanditPAM:
         medoids, loss, converged = self._swap(data, medoids, med_mask, key,
                                               ctx, res)
         res.wall_by_phase["swap"] = time.perf_counter() - t0
-        res.medoids = np.asarray(medoids)
+        res.medoids = np.asarray(host_read(medoids))
         res.loss = loss
         res.n_swaps = len(res.swap_history)
         res.converged = converged

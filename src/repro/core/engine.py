@@ -43,6 +43,7 @@ unchanged.  See docs/design.md for the numbered hardware adaptations.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
@@ -131,6 +132,8 @@ def medoid_cache(data: jnp.ndarray, medoids: jnp.ndarray, *, metric: str,
     """d1 (nearest-medoid dist), d2 (second nearest), assignment; [n] each.
     One streaming top-2 pass — the hottest per-iteration helper holds a
     single [tile, k] block instead of ``[n, k]`` plus an inf-masked copy."""
+    # tracecheck: ignore[TRC001] -- `tile` is in static_argnames: a host int
+    # at trace time, never a traced value.
     t = _EXACT_CHUNK if tile is None else int(tile)
     return _stream_top2_jnp(data, data[medoids], metric=metric, tile=t)
 
@@ -145,6 +148,8 @@ def total_loss(data: jnp.ndarray, medoids: jnp.ndarray, *, metric: str,
     vector is reduced tile-by-tile; the final sum runs over the intact
     [n] vector so summation order (and the ledger's loss bits) match the
     historical materialised path."""
+    # tracecheck: ignore[TRC001] -- `tile` is in static_argnames: a host int
+    # at trace time, never a traced value.
     t = _EXACT_CHUNK if tile is None else int(tile)
     n = data.shape[0]
     med = data[medoids]
@@ -324,6 +329,33 @@ def counted_dispatch(fn, dispatches: Dict[str, int], phase: str):
         dispatches[phase] = dispatches.get(phase, 0) + 1
         return fn(*args, **kw)
     return call
+
+
+def host_read(x):
+    """The sanctioned device→host read point for the drivers.
+
+    Every ledger/convergence read in ``fit`` funnels through this one
+    explicit ``jax.device_get`` so the whole fit runs clean under
+    ``jax.transfer_guard("disallow")`` (which bans only *implicit*
+    transfers): scattered ``float()``/``np.asarray()`` syncs would each
+    be a separate, invisible transfer — and TRC001 findings if they
+    leaked into jit-reachable code.  Accepts any pytree; returns numpy
+    leaves (Python scalars pass through unchanged).
+    """
+    return jax.device_get(x)
+
+
+@contextlib.contextmanager
+def host_stage(reason: str):
+    """Sanctioned host→device staging span (input upload, RNG chain
+    head, context construction).  The ``reason`` is mandatory, mirroring
+    the tracecheck suppression policy: every allowed transfer window
+    names why it exists.  Inside the span the transfer guard is relaxed
+    to "allow"; everything outside stays at the caller's level."""
+    if not reason:
+        raise ValueError("host_stage requires a non-empty reason")
+    with jax.transfer_guard("allow"):
+        yield
 
 
 # ---------------------------------------------------------------------------

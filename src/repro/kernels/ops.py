@@ -211,6 +211,9 @@ def swap_g_stats_cached(dxy: jnp.ndarray, d1_b: jnp.ndarray,
         sums, sq, cross = one(dxy, d1_b, d2_b, assign_b, w, lead_g)
     else:
         sums = sq = cross = None
+        # tracecheck: ignore[TRC002] -- trace-constant chunking over the
+        # static cache width b (shape-derived); each chunk is one kernel
+        # launch and the += merge order is fixed by the range().
         for lo in range(0, b, CACHE_B_MAX):
             hi = min(lo + CACHE_B_MAX, b)
             part = one(dxy[:, lo:hi], d1_b[lo:hi], d2_b[lo:hi],

@@ -114,7 +114,7 @@ def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
     for j, kind in enumerate(cfg.layer_pattern):
         lkeys = jax.random.split(jax.random.fold_in(keys[3], j), g)
         groups.append(jax.vmap(
-            lambda kk: _init_layer(cfg, kind, kk, dtype))(lkeys))
+            lambda kk, kind=kind: _init_layer(cfg, kind, kk, dtype))(lkeys))
     params["groups"] = tuple(groups)
     if any("shared_attn" in k for k in cfg.layer_pattern):
         params["shared_attn"] = _init_shared_attn(cfg, keys[4], dtype)

@@ -1,5 +1,13 @@
-from . import checkpoint, elastic, fault
-from .fault import FaultTolerantLoop, Preemption, StragglerMonitor
+"""``repro.runtime`` — checkpoint/runtime support for the clustering engine.
 
-__all__ = ["checkpoint", "elastic", "fault", "FaultTolerantLoop",
-           "Preemption", "StragglerMonitor"]
+Only :mod:`.checkpoint` (bit-exact snapshot/resume, used by the serving
+layer) is part of the product surface.  The elastic-reshard and
+fault-tolerance scaffolding for the dormant LM training arc is
+quarantined in :mod:`.elastic` / :mod:`.fault` — import those
+explicitly; they are intentionally NOT loaded from the package front
+(docs/design.md #9, mirroring ``repro.serve.lm``).
+"""
+
+from . import checkpoint
+
+__all__ = ["checkpoint"]

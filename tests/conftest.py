@@ -1,0 +1,8 @@
+"""Shared fixtures: the tracecheck runtime-guard harness.
+
+The fixtures live in ``repro.analysis.guard`` (so shipping code and
+benchmarks can reuse the harness); re-exporting them here makes pytest
+discover them for every test module.
+"""
+
+from repro.analysis.guard import fit_guard, trace_guard  # noqa: F401

@@ -1,0 +1,8 @@
+"""tracecheck fixture: TRC005 vmap in a batch driver."""
+
+import jax
+
+
+def _swap_batch(data, meds):
+    # TRC005: lane parity contract is lax.map replaying single-fit HLO.
+    return jax.vmap(lambda d, m: d[m].sum(axis=-1))(data, meds)

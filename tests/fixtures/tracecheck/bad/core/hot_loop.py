@@ -1,0 +1,41 @@
+"""tracecheck fixture: TRC001 host syncs + TRC002 loops in traced code.
+
+Never imported — parsed by tests/test_analysis.py as a known-violation
+corpus.  The directory shape (bad/core/) puts it in the same rule
+scopes as src/repro/core/.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def bad_build(data, *, n):
+    total = jnp.float32(0.0)
+    for i in range(n):                             # TRC002: unrolled loop
+        total = total + float(jnp.sum(data[i]))    # TRC001: float() sync
+    return np.asarray(total)                       # TRC001: numpy fallback
+
+
+def loop_body(i, carry):
+    return carry + carry.item()                    # TRC001 via fori closure
+
+
+def run(c0):
+    return jax.lax.fori_loop(0, 3, loop_body, c0)
+
+
+def _step(x):
+    return x * 2
+
+
+def host_driver(data):
+    # NOT jit-reachable: host orchestration may sync freely.
+    fn = jax.jit(_step)
+    out = fn(data)
+    while float(out.sum()) < 0.0:                  # host loop: no finding
+        out = fn(out)
+    return out.item()

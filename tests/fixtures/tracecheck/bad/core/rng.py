@@ -1,0 +1,15 @@
+"""tracecheck fixture: TRC003 raw-PRNGKey violations (PR-4 bug shape)."""
+
+import jax
+
+
+def resample(n, step):
+    # TRC003: raw key construction outside a sanctioned chain head —
+    # two call sites with equal `step` silently draw identical subsets.
+    key = jax.random.PRNGKey(step)
+    return jax.random.randint(key, (n,), 0, n)
+
+
+def draw_inline(n):
+    # TRC003: draw keyed directly on a fresh PRNGKey.
+    return jax.random.uniform(jax.random.PRNGKey(0), (n,))

@@ -1,0 +1,14 @@
+"""tracecheck fixture: TRC004 collective inside a StatsBackend."""
+
+import jax
+import jax.numpy as jnp
+
+
+class ShardedStatsBackend:
+    name = "sharded"
+
+    def build_stats_from_d(self, dxy, dnear_b, w):
+        g = jnp.minimum(dxy - dnear_b[None, :], 0.0) * w[None, :]
+        # TRC004: backends are collective-free by contract; the psum
+        # composition point belongs to the distributed layer.
+        return jax.lax.psum(jnp.sum(g, axis=1), "data")

@@ -1,0 +1,12 @@
+"""tracecheck fixture: TRC000 — suppression without a justification.
+
+The bare ignore below DOES suppress its TRC001 target, but the missing
+`-- reason` raises TRC000 instead.
+"""
+
+import jax
+
+
+@jax.jit
+def f(x):
+    return float(x)  # tracecheck: ignore[TRC001]

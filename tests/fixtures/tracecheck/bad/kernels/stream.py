@@ -1,0 +1,12 @@
+"""tracecheck fixture: TRC005 at[].set(inf) masking on a streaming path."""
+
+import jax.numpy as jnp
+
+
+def top2(dmat):
+    a = jnp.argmin(dmat, axis=1)
+    rows = jnp.arange(dmat.shape[0])
+    # TRC005: materializes a full masked copy — the streaming contract
+    # is online (min, min2) accumulation.
+    masked = dmat.at[rows, a].set(jnp.inf)
+    return jnp.min(dmat, axis=1), jnp.min(masked, axis=1), a

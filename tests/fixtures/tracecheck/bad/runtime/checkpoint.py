@@ -1,0 +1,14 @@
+"""tracecheck fixture: TRC005 dtype-less conversion in checkpoint restore."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def restore_leaf(arr):
+    # TRC005: no dtype — an f64 numpy leaf comes back f32.
+    return jnp.asarray(arr)
+
+
+def restore_stat(x):
+    # TRC005: astype to f32 breaks the bit-exact round-trip.
+    return np.asarray(x, np.float64).astype("float32")

@@ -1,0 +1,14 @@
+"""tracecheck fixture: TRC005 f32 round-trip in f64 host accounting."""
+
+import numpy as np
+
+
+class LeakyDriftMonitor:
+    def __init__(self):
+        self.sum = np.float64(0.0)
+
+    def update(self, dmin):
+        d = np.asarray(dmin, np.float64)
+        # TRC005: silently rounds the f64 accumulator to f32.
+        self.sum = np.float32(self.sum + d.sum())
+        return self.sum

@@ -1,0 +1,47 @@
+"""tracecheck fixture: the contract-conformant forms of each rule.
+
+Every pattern here is the sanctioned counterpart of a bad/ violation —
+the corpus must produce ZERO findings under the shipped config.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def good_build(data, *, k):
+    # lax.fori_loop, not a Python loop (TRC002 counterpart).
+    def body(i, dnear):
+        return jnp.minimum(dnear, jnp.sum(jnp.abs(data - data[i]), axis=1))
+
+    init = jnp.full((data.shape[0],), jnp.inf, jnp.float32)
+    return jax.lax.fori_loop(0, k, body, init)
+
+
+@jax.jit
+def masked_top2(dmat):
+    # Where-mask inside the pass, not at[].set(inf) (TRC005 counterpart).
+    a = jnp.argmin(dmat, axis=1).astype(jnp.int32)
+    cols = jax.lax.broadcasted_iota(jnp.int32, dmat.shape, 1)
+    d2 = jnp.min(jnp.where(cols == a[:, None], jnp.inf, dmat), axis=1)
+    return jnp.min(dmat, axis=1), d2, a
+
+
+def host_driver(data):
+    # Host orchestration may sync: not jit-reachable (TRC001 negative).
+    d = good_build(jnp.asarray(data, jnp.float32), k=3)
+    total = float(np.asarray(d).sum())
+    for _ in range(2):  # host loop: TRC002 negative
+        total += 1.0
+    return total
+
+
+@jax.jit
+def justified(x):
+    # Suppression WITH a justification: suppressed, and no TRC000.
+    # tracecheck: ignore[TRC001] -- fixture: demonstrates a justified
+    # suppression; x is replaced by a static int at every call site.
+    return float(x)

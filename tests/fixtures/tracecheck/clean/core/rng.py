@@ -1,0 +1,15 @@
+"""tracecheck fixture: sanctioned RNG chain (TRC003 negatives)."""
+
+import jax
+
+
+def _phase_key(seed, tag, step):
+    # Sanctioned chain head (config lists `_phase_key`): the one raw
+    # PRNGKey, immediately folded into the documented chain.
+    return jax.random.fold_in(jax.random.PRNGKey(seed ^ tag), step)
+
+
+def round_draw(chain, rnd, shard, n):
+    # Draws key off the fold_in chain, never a fresh PRNGKey.
+    key = jax.random.fold_in(jax.random.fold_in(chain, rnd), shard)
+    return jax.random.randint(key, (n,), 0, n)

@@ -1,0 +1,13 @@
+"""tracecheck fixture: collective-free StatsBackend (TRC004 negative)."""
+
+import jax.numpy as jnp
+
+
+class PartialSumStatsBackend:
+    name = "partial"
+
+    def build_stats_from_d(self, dxy, dnear_b, w):
+        # Per-shard partial sums only; the distributed layer composes
+        # them with its single psum.
+        g = jnp.minimum(dxy - dnear_b[None, :], 0.0) * w[None, :]
+        return jnp.sum(g, axis=1)
