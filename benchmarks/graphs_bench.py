@@ -1,0 +1,83 @@
+"""Compiled-graph cost census (docs/design.md #10) → BENCH_graphs.json.
+
+For every budgeted graphcheck entrypoint, lower + compile at the
+declared big shapes and record what XLA itself reports:
+
+* ``cost_analysis`` — flops and bytes accessed (the analytic roofline
+  inputs, straight from the compiled executable rather than the
+  hand-derived formulas in ``benchmarks.roofline``);
+* ``memory_analysis`` — the peak temp the GRC001 budget bounds, next to
+  the bound itself and the headroom ratio.
+
+The artifact makes budget drift visible in CI history: a PR that eats
+headroom shows up as a ratio step long before it trips the analyzer.
+"""
+from __future__ import annotations
+
+import json
+
+from .common import emit
+
+
+def _cost_totals(compiled):
+    """Fold ``cost_analysis()`` to {flops, bytes}.  On jax 0.4.x the
+    call returns a LIST of per-computation dicts; newer jax returns the
+    dict directly."""
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, dict):
+        ca = [ca]
+    out = {"flops": 0.0, "bytes": 0.0}
+    for entry in ca:
+        out["flops"] += float(entry.get("flops", 0.0))
+        out["bytes"] += float(entry.get("bytes accessed", 0.0))
+    return out
+
+
+def collect():
+    from repro.analysis.graph import budgets
+    from repro.analysis.graph.entrypoints import registry
+
+    rows = []
+    for spec in registry():
+        if spec.budget is None:
+            continue
+        fn, args, kw = spec.build_big()
+        compiled = fn.lower(*args, **kw).compile()
+        ma = compiled.memory_analysis()
+        temp = int(ma.temp_size_in_bytes) if ma is not None and \
+            hasattr(ma, "temp_size_in_bytes") else None
+        bound = budgets.budget_bytes(spec.budget)
+        row = {
+            "entrypoint": spec.name,
+            "shape": budgets.shape_for(spec.budget),
+            "budget_bytes": bound,
+            "budget_doc": budgets.budget_doc(spec.budget),
+            "temp_bytes": temp,
+            "headroom": round(temp / bound, 4) if temp is not None
+            else None,
+            **_cost_totals(compiled),
+        }
+        rows.append(row)
+    return rows
+
+
+def write_json(path: str) -> None:
+    import jax
+    doc = {"bench": "graphs", "jax": jax.__version__,
+           "entrypoints": collect()}
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+
+
+def run() -> None:
+    for row in collect():
+        emit(f"graphs/{row['entrypoint']}", 0.0,
+             f"temp={row['temp_bytes']} budget={row['budget_bytes']} "
+             f"headroom={row['headroom']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -13,7 +13,9 @@ stats-backend × fused/stepped driver, median of >= 3 reps) to
 (``fit_batch`` vs the Python loop at B=64) to ``BENCH_multifit.json``,
 and the serving-layer sweep (p50/p99 predict latency,
 refit-behind-traffic throughput, warm-vs-cold refit ledger) to
-``BENCH_serve.json``.
+``BENCH_serve.json``, and the compiled-graph cost census (flops/bytes
+from ``cost_analysis`` + peak temp vs the GRC001 budget, per graphcheck
+entrypoint) to ``BENCH_graphs.json``.
 ``--solver`` (repeatable) restricts the solver sweep to named solvers."""
 from __future__ import annotations
 
@@ -26,10 +28,10 @@ import traceback
 def main(argv=None) -> None:
     from repro.api import available_solvers
 
-    from . import (core_bench, distributed_bench, kernels_bench,
-                   loss_quality, megakernel_bench, multifit_bench, roofline,
-                   scaling_n, serve_bench, sigma_adaptivity, solvers,
-                   violation_pca)
+    from . import (core_bench, distributed_bench, graphs_bench,
+                   kernels_bench, loss_quality, megakernel_bench,
+                   multifit_bench, roofline, scaling_n, serve_bench,
+                   sigma_adaptivity, solvers, violation_pca)
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", nargs="?", const="BENCH_solvers.json",
@@ -52,11 +54,13 @@ def main(argv=None) -> None:
         serve_bench.write_json(os.path.join(outdir, "BENCH_serve.json"))
         megakernel_bench.write_json(
             os.path.join(outdir, "BENCH_megakernel.json"))
+        graphs_bench.write_json(os.path.join(outdir, "BENCH_graphs.json"))
         return
     failed = []
     for mod in (loss_quality, scaling_n, sigma_adaptivity, violation_pca,
                 solvers, core_bench, distributed_bench, multifit_bench,
-                serve_bench, kernels_bench, megakernel_bench, roofline):
+                serve_bench, kernels_bench, megakernel_bench, graphs_bench,
+                roofline):
         try:
             if mod is solvers:
                 mod.sweep(solvers=args.solver)

@@ -174,6 +174,9 @@ def default_config() -> Config:
             # the package front.
             "repro.analysis", "repro.analysis.__main__",
             "repro.analysis.guard", "repro.analysis.imports",
+            # graphcheck: its own CLI entry, plus the benchmark harness
+            # imports the budgets/registry modules directly
+            "repro.analysis.graph", "repro.analysis.graph.__main__",
         ),
         quarantine=LM_QUARANTINE,
     )

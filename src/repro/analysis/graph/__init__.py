@@ -1,0 +1,16 @@
+"""graphcheck — compiled-graph contract analyzer (docs/design.md #10).
+
+tracecheck (``repro.analysis``) lints the *source*; this package audits
+the *compiled programs* the source actually produces.  ``entrypoints``
+registers every hot jitted program at canonical symbolic shapes,
+``rules`` runs the GRC000–GRC006 contracts over their jaxprs/lowered
+text/compiled memory analyses, ``budgets`` declares the peak-temp byte
+bounds, and ``fingerprint`` maintains the version-keyed golden op-census
+artifact at ``tests/fixtures/graphs.json``.
+
+CLI: ``python -m repro.analysis.graph`` (see ``--help``).
+"""
+
+from .rules import ALL_RULES, Finding, Report, RULE_DOCS, analyze
+
+__all__ = ["ALL_RULES", "RULE_DOCS", "Finding", "Report", "analyze"]

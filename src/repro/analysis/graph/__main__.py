@@ -1,0 +1,149 @@
+"""``python -m repro.analysis.graph`` — the graphcheck CLI.
+
+Examples::
+
+    python -m repro.analysis.graph
+    python -m repro.analysis.graph --format json --output graphcheck.json
+    python -m repro.analysis.graph --entrypoints core._build_fused[pic]
+    python -m repro.analysis.graph --rules GRC003,GRC004 --skip-budgets
+    REGEN_GOLDEN=1 python -m repro.analysis.graph
+    python -m repro.analysis.graph --golden-diff
+
+Exit codes: 0 clean, 1 findings, 2 usage error.  Unlike tracecheck this
+CLI imports jax — it traces, lowers, and (without ``--skip-budgets``)
+compiles every registered entrypoint.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.graph",
+        description="graphcheck: compiled-graph contract analyzer with "
+                    "golden HLO fingerprints")
+    parser.add_argument("--format", choices=("human", "json"),
+                        default="human")
+    parser.add_argument("--output", metavar="FILE",
+                        help="also write the JSON report to FILE")
+    parser.add_argument("--rules", metavar="CSV",
+                        help="comma-separated rule ids to run "
+                             "(default: all)")
+    parser.add_argument("--entrypoints", metavar="CSV",
+                        help="comma-separated registry names to analyze "
+                             "(default: all)")
+    parser.add_argument("--skip-budgets", action="store_true",
+                        help="skip GRC001 big-shape compiles (fast trace-"
+                             "only pass)")
+    parser.add_argument("--golden", metavar="FILE",
+                        help="golden fingerprint file (default: "
+                             "tests/fixtures/graphs.json)")
+    parser.add_argument("--golden-diff", action="store_true",
+                        help="print the primitive-level diff vs the "
+                             "golden and exit (0 = no drift)")
+    parser.add_argument("--list-rules", action="store_true")
+    parser.add_argument("--list-entrypoints", action="store_true")
+    args = parser.parse_args(argv)
+
+    # Rule/registry imports are deferred past --help so argparse errors
+    # stay fast and jax-free.
+    from . import fingerprint as fp
+    from . import rules as rules_mod
+    from .entrypoints import by_name, registry
+
+    if args.list_rules:
+        for rid in sorted(rules_mod.RULE_DOCS):
+            print(f"{rid}: {rules_mod.RULE_DOCS[rid]}")
+        return 0
+    if args.list_entrypoints:
+        for spec in registry():
+            tags = ",".join(sorted(spec.tags))
+            print(f"{spec.name}  [{tags}]")
+        return 0
+
+    rule_ids = None
+    if args.rules:
+        rule_ids = tuple(r.strip() for r in args.rules.split(",")
+                         if r.strip())
+        unknown = [r for r in rule_ids if r not in rules_mod.ALL_RULES]
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)} "
+                  f"(see --list-rules)", file=sys.stderr)
+            return 2
+
+    specs = None
+    if args.entrypoints:
+        table = by_name()
+        names = [s.strip() for s in args.entrypoints.split(",")
+                 if s.strip()]
+        unknown = [s for s in names if s not in table]
+        if unknown:
+            print(f"unknown entrypoint(s): {', '.join(unknown)} "
+                  f"(see --list-entrypoints)", file=sys.stderr)
+            return 2
+        specs = [table[s] for s in names]
+
+    golden_path = args.golden or fp.default_golden_path()
+    golden_doc = None
+    golden_note = None
+    if golden_path and os.path.isfile(golden_path):
+        golden_doc = fp.load_golden(golden_path)
+    elif golden_path:
+        golden_note = (f"no golden file at {golden_path}; GRC000 drift "
+                       f"not evaluated (regenerate with "
+                       f"{fp.GOLDEN_ENV}=1)")
+    else:
+        golden_note = ("golden path unresolvable (installed copy without "
+                       "the tests tree); GRC000 drift not evaluated")
+
+    regen = os.environ.get(fp.GOLDEN_ENV, "") not in ("", "0")
+
+    report, prints = rules_mod.analyze(
+        specs, golden_doc=None if regen else golden_doc,
+        rules=rule_ids, with_budgets=not args.skip_budgets)
+    if golden_note and not regen and \
+            (rule_ids is None or "GRC000" in rule_ids):
+        report.notes.append(golden_note)
+
+    if regen:
+        if not golden_path:
+            print("cannot regenerate: golden path unresolvable",
+                  file=sys.stderr)
+            return 2
+        if specs is not None:
+            print("cannot regenerate from a partial --entrypoints run",
+                  file=sys.stderr)
+            return 2
+        merged = fp.merge_golden(golden_doc, prints)
+        fp.dump_golden(merged, golden_path)
+        print(f"wrote {len(prints)} fingerprint(s) for jax "
+              f"{__import__('jax').__version__} to {golden_path}")
+
+    if args.golden_diff:
+        drift = [f for f in report.findings if f.rule == "GRC000"]
+        for f in drift:
+            print(f"{f.entrypoint}:\n{f.message}")
+        for n in report.notes:
+            print(f"note: {n}")
+        print(f"{len(drift)} drifted entrypoint(s)")
+        return 1 if drift else 0
+
+    doc = rules_mod.report_to_json(report, prints)
+    if args.output:
+        with open(args.output, "w", encoding="utf-8") as fh:
+            json.dump(doc, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+    if args.format == "json":
+        print(json.dumps(doc, indent=1, sort_keys=True))
+    else:
+        print(rules_mod.format_human(report))
+    return 1 if report.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

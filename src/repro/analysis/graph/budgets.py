@@ -1,0 +1,145 @@
+"""GRC001 memory-budget declarations — the repo's peak-temp contracts.
+
+One place declares, per registered entrypoint, the byte bound its
+compiled program's ``memory_analysis().temp_size_in_bytes`` must stay
+under at the canonical big shapes.  The analyzer (``rules.GRC001``) and
+``tests/test_megakernel.py``'s regression gate both consume these —
+the thresholds cannot drift between the two surfaces.
+
+Budget semantics: every bound is an O(n·tile)-class formula of the big
+shapes, NOT a measured-value-plus-slack pin.  The streaming engine
+surfaces keep the PR-8 megakernel-gate form — a tenth of the block the
+pre-streaming graph materialised ([n, k] for loss/cache, [n, chunk] for
+the exact fallback) — so a revert to any materialised form overshoots
+the budget by 10x and trips GRC001 unambiguously.  The fused drivers are
+budgeted at their true working set: the O(n·width) PIC ring plus a
+fixed number of O(n·k) cache/carry-class temporaries.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.engine import _EXACT_CHUNK
+
+__all__ = ["budget_bytes", "budget_doc", "budget_names", "shape_for",
+           "N_BIG", "D_BIG", "K_BIG", "ROWS_PREDICT", "ROWS_ASSIGN",
+           "N_DRIVER", "D_DRIVER", "K_DRIVER", "WIDTH_DRIVER"]
+
+# Canonical big shapes — the megakernel gate's scale (PR 8).
+N_BIG, D_BIG, K_BIG = 200_000, 16, 256
+# Serving closures: one 8k-row predict bucket, one 128k-row assign pass.
+ROWS_PREDICT = 8192
+ROWS_ASSIGN = 131_072
+# Fused single-fit drivers: moderate n (compile-time bound), pic ring.
+N_DRIVER, D_DRIVER, K_DRIVER = 20_000, 8, 4
+WIDTH_DRIVER = 12 * 32          # 12 round-batches of B=32 columns
+
+_F32 = 4
+
+# name -> (formula over the shape dict, human-readable formula doc)
+_BUDGETS = {
+    # Streaming loss/cache: must hold NO [n, k] block — same tenth-of-
+    # the-block bound the PR-8 gate hardcoded.
+    "engine.total_loss": (
+        lambda s: s["n"] * s["k"] * _F32 // 10,
+        "n*k*4 // 10  (a tenth of the materialised [n, k] block)"),
+    "engine.medoid_cache": (
+        lambda s: s["n"] * s["k"] * _F32 // 10,
+        "n*k*4 // 10  (a tenth of the materialised [n, k] block)"),
+    # Exact fallbacks: must hold NO [n, chunk] scan temp.
+    "engine.exact_build_means": (
+        lambda s: s["n"] * _EXACT_CHUNK * _F32 // 10,
+        "n*512*4 // 10  (a tenth of the pre-streaming scan temp)"),
+    # Exact swap means: the PRODUCT is the [k, n] per-arm mean table, so
+    # one product-size staging copy is legal; the bound adds a tenth of
+    # the pre-streaming [n, chunk] scan temp, which a revert to the
+    # materialised walk overshoots by ~2x.
+    "engine.exact_swap_means": (
+        lambda s: s["n"] * s["k"] * _F32
+        + s["n"] * _EXACT_CHUNK * _F32 // 10,
+        "n*k*4 + n*512*4 // 10  (one [k, n] product-size staging copy "
+        "+ tenth of the pre-streaming scan temp)"),
+    # Interpret-mode stream kernels: these budgets bound the pallas
+    # EMULATOR envelope, not the on-chip tile story (interpret mode
+    # holds full-extent grid buffers by construction — measured: one
+    # [m, n] block for build, two for swap's paired moment streams, one
+    # [n, k] for top2).  The contract is still load-bearing: an extra
+    # full-extent buffer smuggled into a kernel (a second g-matrix, an
+    # un-fused square) adds a whole block and trips the 1.5x bound.
+    "kernels.stream_build_g_stats": (
+        lambda s: s["m"] * s["n"] * _F32 * 3 // 2,
+        "m*n*4*3/2  (1.5x the interpret-mode [m, n] grid buffer)"),
+    "kernels.stream_swap_g_stats": (
+        lambda s: s["m"] * s["n"] * _F32 * 5 // 2,
+        "m*n*4*5/2  (2.5x the [m, n] grid buffer: swap holds paired "
+        "moment streams)"),
+    "kernels.stream_top2": (
+        lambda s: s["n"] * s["k"] * _F32 * 3 // 2,
+        "n*k*4*3/2  (1.5x the interpret-mode [n, k] grid buffer)"),
+    # Serving closures.  predict RETURNS the [rows, k] block (that block
+    # is the product): temps around it stay under one extra block.
+    "api.get_predict_fn": (
+        lambda s: s["rows"] * s["k"] * _F32 * 2,
+        "rows*k*4*2  (the returned block + one temp copy ceiling)"),
+    "api.get_assign_fn": (
+        lambda s: s["rows"] * s["k"] * _F32 // 10,
+        "rows*k*4 // 10  (a tenth of the never-materialised block)"),
+    # Fused drivers (pic): ring + a bounded number of n-vectors/cache
+    # blocks.  The dominant legal temps are the [n, width] ring update
+    # and the [n, k]-class candidate stats; 4 rings' worth of slack
+    # keeps the bound far under any [n, n] materialisation (which is
+    # n/width ~ 52x one ring at driver shapes).
+    "core._build_fused[pic]": (
+        lambda s: 4 * s["n"] * s["width"] * _F32,
+        "4*n*width*4  (PIC ring working set; [n, n] would be ~52x)"),
+    "core._swap_iter[pic]": (
+        lambda s: 4 * s["n"] * s["width"] * _F32
+        + 4 * s["n"] * s["k"] * _F32,
+        "4*n*width*4 + 4*n*k*4  (ring + carry/cache working set)"),
+}
+
+# The shape dict each budgeted entrypoint is lowered at (kept next to
+# the formulas so test_megakernel and the analyzer agree on BOTH).
+_SHAPES: Dict[str, Dict[str, int]] = {
+    "engine.total_loss": {"n": N_BIG, "d": D_BIG, "k": K_BIG},
+    "engine.medoid_cache": {"n": N_BIG, "d": D_BIG, "k": K_BIG},
+    "engine.exact_build_means": {"n": N_BIG, "d": D_BIG},
+    "engine.exact_swap_means": {"n": N_BIG, "d": D_BIG, "k": K_BIG},
+    "kernels.stream_build_g_stats": {"m": 256, "n": N_BIG, "d": D_BIG},
+    "kernels.stream_swap_g_stats": {"m": 256, "n": N_BIG, "d": D_BIG},
+    "kernels.stream_top2": {"n": N_BIG, "d": D_BIG, "k": K_BIG},
+    "api.get_predict_fn": {"rows": ROWS_PREDICT, "k": K_BIG, "d": D_BIG},
+    "api.get_assign_fn": {"rows": ROWS_ASSIGN, "k": K_BIG, "d": D_BIG},
+    "core._build_fused[pic]": {"n": N_DRIVER, "d": D_DRIVER,
+                               "k": K_DRIVER, "width": WIDTH_DRIVER},
+    "core._swap_iter[pic]": {"n": N_DRIVER, "d": D_DRIVER,
+                             "k": K_DRIVER, "width": WIDTH_DRIVER},
+}
+
+
+def budget_names():
+    """All declared budget keys."""
+    return tuple(_BUDGETS)
+
+
+def shape_for(name: str) -> Dict[str, int]:
+    """The canonical big-shape point ``name`` is budgeted at."""
+    return dict(_SHAPES[name])
+
+
+def budget_bytes(name: str, **shape) -> int:
+    """Evaluate the declared byte bound for ``name``.
+
+    With no ``shape`` overrides the canonical big shapes apply; tests
+    may evaluate the same formula at other shape points.
+    """
+    formula, _ = _BUDGETS[name]
+    s = shape_for(name)
+    s.update(shape)
+    return int(formula(s))
+
+
+def budget_doc(name: str) -> str:
+    """The human-readable formula behind ``budget_bytes(name)``."""
+    return _BUDGETS[name][1]

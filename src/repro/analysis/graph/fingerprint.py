@@ -1,0 +1,201 @@
+"""Canonical compiled-graph fingerprints + the golden artifact.
+
+A fingerprint is a *trace-level* identity for one registered entrypoint
+at the registry's canonical shapes: the sorted primitive census of the
+whole ClosedJaxpr (subjaxprs included — pjit bodies, scan/while carries,
+cond branches, shard_map and pallas_call interiors) plus a short hash
+over the per-equation ``(primitive, output shapes/dtypes)`` sequence and
+the program's input/output avals.
+
+Semantics (docs/design.md #10): the registry pins the shapes, so a
+fingerprint change is graph DRIFT — somebody changed what the compiled
+program *is* — never a retrace artifact.  Retraces happen at new shapes
+and new shapes are not fingerprinted; the same source at the same shapes
+always re-derives the same jaxpr (tracing is deterministic).  Goldens
+are keyed by ``jax.__version__`` because the jaxpr a given source
+lowers to legitimately differs across jax releases: a runner whose jax
+version has no committed golden reports a note, not a finding.
+
+The golden artifact lives at ``tests/fixtures/graphs.json``; regenerate
+with ``REGEN_GOLDEN=1 python -m repro.analysis.graph`` (merges the
+running version's entries, preserving other versions').
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+__all__ = ["Survey", "survey", "fingerprint", "diff_fingerprints",
+           "load_golden", "merge_golden", "golden_for_version",
+           "default_golden_path", "GOLDEN_ENV"]
+
+GOLDEN_ENV = "REGEN_GOLDEN"
+
+
+class Survey:
+    """Everything one recursive jaxpr walk collects.
+
+    * ``census`` — primitive name -> count, whole program.
+    * ``eqn_sig`` — flat ``(primitive, out-aval-string)`` sequence in
+      walk order (the hash substrate).
+    * ``big_outs`` — ``(primitive, shape)`` for every equation output;
+      the materialisation rule scans these.
+    * ``converts`` — ``(in_dtype, out_dtype)`` per convert_element_type.
+    * ``runtime_puts`` — device_put count EXCLUDING const staging.  A
+      device_put whose inputs are all trace-time constants (Literals or
+      constvars of the enclosing jaxpr — e.g. ``jnp.asarray`` on a host
+      table) is constant placement, not a runtime host round-trip; the
+      census still counts it, the transfer rule must not.
+    """
+
+    def __init__(self) -> None:
+        self.census: Dict[str, int] = {}
+        self.eqn_sig: List[Tuple[str, str]] = []
+        self.big_outs: List[Tuple[str, Tuple[int, ...]]] = []
+        self.converts: List[Tuple[str, str]] = []
+        self.runtime_puts: int = 0
+
+
+def _aval_str(v) -> str:
+    aval = v.aval
+    shape = getattr(aval, "shape", ())
+    dtype = getattr(aval, "dtype", None)
+    return f"{dtype}[{','.join(str(s) for s in shape)}]"
+
+
+def _walk(jaxpr, out: Survey) -> None:
+    consts = set(map(id, getattr(jaxpr, "constvars", ())))
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        out.census[name] = out.census.get(name, 0) + 1
+        if name == "device_put":
+            staged = all(hasattr(v, "val") or id(v) in consts
+                         for v in eqn.invars)
+            if not staged:
+                out.runtime_puts += 1
+        for v in eqn.outvars:
+            aval = v.aval
+            out.eqn_sig.append((name, _aval_str(v)))
+            shape = getattr(aval, "shape", ())
+            if len(shape) >= 2:
+                out.big_outs.append((name, tuple(int(s) for s in shape)))
+        if name == "convert_element_type":
+            src = eqn.invars[0].aval
+            dst = eqn.outvars[0].aval
+            out.converts.append((str(getattr(src, "dtype", "?")),
+                                 str(getattr(dst, "dtype", "?"))))
+        for p in eqn.params.values():
+            _walk_param(p, out)
+
+
+def _walk_param(p, out: Survey) -> None:
+    if hasattr(p, "jaxpr") and hasattr(p.jaxpr, "eqns"):   # ClosedJaxpr
+        _walk(p.jaxpr, out)
+    elif hasattr(p, "eqns"):                               # raw Jaxpr
+        _walk(p, out)
+    elif isinstance(p, (list, tuple)):
+        for q in p:
+            _walk_param(q, out)
+
+
+def survey(closed_jaxpr) -> Survey:
+    """One recursive walk over a ClosedJaxpr (subjaxprs included)."""
+    out = Survey()
+    _walk(closed_jaxpr.jaxpr, out)
+    return out
+
+
+def fingerprint(closed_jaxpr, sv: Optional[Survey] = None) -> Dict:
+    """The canonical fingerprint document for one entrypoint."""
+    sv = sv if sv is not None else survey(closed_jaxpr)
+    in_avals = [_aval_str(v) for v in closed_jaxpr.jaxpr.invars]
+    out_avals = [_aval_str(v) for v in closed_jaxpr.jaxpr.outvars]
+    h = hashlib.sha256()
+    for name, aval in sv.eqn_sig:
+        h.update(name.encode())
+        h.update(aval.encode())
+    for a in in_avals + out_avals:
+        h.update(a.encode())
+    return {
+        "census": dict(sorted(sv.census.items())),
+        "in": in_avals,
+        "out": out_avals,
+        "hash": h.hexdigest()[:16],
+    }
+
+
+def diff_fingerprints(old: Dict, new: Dict) -> str:
+    """Primitive-level diff between two fingerprints, human-readable."""
+    lines: List[str] = []
+    oc, nc = old.get("census", {}), new.get("census", {})
+    for prim in sorted(set(oc) | set(nc)):
+        a, b = oc.get(prim, 0), nc.get(prim, 0)
+        if a != b:
+            lines.append(f"    {prim}: {a} -> {b} ({b - a:+d})")
+    for field in ("in", "out"):
+        if old.get(field) != new.get(field):
+            lines.append(f"    {field} avals: {old.get(field)} -> "
+                         f"{new.get(field)}")
+    if not lines and old.get("hash") != new.get("hash"):
+        lines.append(
+            "    same census, different eqn sequence/avals "
+            f"(hash {old.get('hash')} -> {new.get('hash')})")
+    return "\n".join(lines)
+
+
+# -- golden artifact io -----------------------------------------------------
+
+def default_golden_path() -> Optional[str]:
+    """``tests/fixtures/graphs.json`` at the repo root, if resolvable.
+
+    The package normally runs from a source checkout
+    (``<root>/src/repro/analysis/graph/`` -> ``<root>``); an installed
+    copy without the tests tree returns None and the CLI reports a note
+    instead of drift findings.
+    """
+    here = os.path.abspath(__file__)
+    root = here
+    for _ in range(5):
+        root = os.path.dirname(root)
+    cand = os.path.join(root, "tests", "fixtures", "graphs.json")
+    return cand if os.path.isdir(os.path.dirname(cand)) else None
+
+
+def load_golden(path: str) -> Dict:
+    with open(path, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    if doc.get("tool") != "graphcheck":
+        raise ValueError(f"{path} is not a graphcheck golden file")
+    return doc
+
+
+def golden_for_version(doc: Optional[Dict],
+                       version: Optional[str] = None) -> Optional[Dict]:
+    """The committed fingerprints for the RUNNING jax version, if any."""
+    if doc is None:
+        return None
+    version = version or jax.__version__
+    return doc.get("goldens", {}).get(version)
+
+
+def merge_golden(doc: Optional[Dict], fingerprints: Dict[str, Dict],
+                 version: Optional[str] = None) -> Dict:
+    """Merge freshly computed fingerprints under the running version's
+    key, preserving every other version's entries byte-for-byte."""
+    version = version or jax.__version__
+    out = {"tool": "graphcheck", "version": 1,
+           "goldens": dict((doc or {}).get("goldens", {}))}
+    out["goldens"][version] = {k: fingerprints[k]
+                               for k in sorted(fingerprints)}
+    return out
+
+
+def dump_golden(doc: Dict, path: str) -> None:
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")

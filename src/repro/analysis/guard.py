@@ -114,6 +114,49 @@ class FitGuard:
         self.last_report = report
         return report
 
+    def fit_batch(self, est, datasets, *, seeds=None, warmup: bool = True,
+                  check_dispatches: bool = True,
+                  check_retrace: bool = True) -> "object":
+        """The batched twin of :meth:`fit` for ``est.fit_batch``.
+
+        Same discipline: one unguarded warm-up batch (compilation stages
+        constants), then the identical batch under
+        ``transfer_guard("disallow")``, asserting
+
+        * zero retraces of the module-level batched drivers,
+        * every per-fit report bit-matches the warm-up run (medoids,
+          loss, eval ledger), and
+        * the batch-level dispatch ledger is exactly
+          ``{"build": 1, "swap": 1}`` — one jit per phase regardless of
+          B, the whole point of the batched engine.
+        """
+        baseline = None
+        if warmup:
+            baseline = est.fit_batch(datasets, seeds)
+        before = jit_cache_sizes() if (warmup and check_retrace) else None
+        with guarded():
+            batch = est.fit_batch(datasets, seeds)
+        if before is not None:
+            after = jit_cache_sizes()
+            assert after == before, (
+                f"guarded fit_batch retraced a fused driver: "
+                f"{before} -> {after}")
+        if baseline is not None:
+            for i, (rep, base) in enumerate(zip(batch, baseline)):
+                assert rep.medoids.tolist() == base.medoids.tolist(), (
+                    f"transfer guard changed fit {i} (medoids)")
+                assert rep.loss == base.loss, (
+                    f"transfer guard changed fit {i} (loss)")
+                assert rep.evals_by_phase == base.evals_by_phase, (
+                    f"transfer guard changed fit {i}'s eval ledger")
+        if check_dispatches:
+            exp = {"build": 1, "swap": 1}
+            assert batch.dispatches_by_phase == exp, (
+                f"batch dispatch ledger {batch.dispatches_by_phase} != "
+                f"one-jit-per-phase contract {exp}")
+        self.last_report = batch
+        return batch
+
 
 try:  # pragma: no cover - exercised via pytest, absent in production
     import pytest

@@ -32,6 +32,7 @@ through these closures.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -155,19 +156,35 @@ def get_assign_fn(k: int, d: int, metric: str, backend: str, rows: int):
     return jax.jit(_fn)
 
 
+# one warning per process, not per request — serving loops call this hot
+_chunk_deprecation_warned = False
+
+
 def assign_medoids(x: np.ndarray, medoid_points: jnp.ndarray, metric: str,
                    *, backend: Optional[str] = None,
-                   chunk: int = DEFAULT_CHUNK
+                   chunk: Optional[int] = None
                    ) -> Tuple[np.ndarray, np.ndarray]:
     """``[m, d]`` queries → ``(labels [m] int32, dmin [m] float32)``.
 
     The serving assignment path: one streaming dispatch through the
     backend's top-2 contract (``StatsBackend.top2``) for the whole
-    request — no host-side chunk loop, no ``[m, k]`` block.  ``chunk``
-    is kept for API compatibility but no longer bounds the dispatch; the
-    streaming pass holds a single row tile resident at any m.
+    request — no host-side chunk loop, no ``[m, k]`` block.
+
+    .. deprecated::
+        ``chunk`` is ignored (the streaming pass holds a single row tile
+        resident at any m) and will be removed; passing it emits a
+        ``DeprecationWarning`` once per process.  ``medoid_distances``
+        keeps its ``chunk`` — there the ``[m, k]`` block is the product
+        and query chunking still bounds residency.
     """
-    del chunk  # legacy knob: the streaming pass needs no query chunking
+    global _chunk_deprecation_warned
+    if chunk is not None and not _chunk_deprecation_warned:
+        _chunk_deprecation_warned = True
+        warnings.warn(
+            "assign_medoids(chunk=...) is deprecated and ignored: the "
+            "streaming top-2 pass needs no query chunking. The parameter "
+            "will be removed in a future release.",
+            DeprecationWarning, stacklevel=2)
     bname = resolve_backend(backend, metric)
     k, d = int(medoid_points.shape[0]), int(medoid_points.shape[1])
     x = np.asarray(x, np.float32)

@@ -233,10 +233,17 @@ _build_step_jit = jax.jit(
                                   "free_rounds"))
 
 
+# ``donate_argnums=(2,)`` donates the PIC ring: the caller replaces
+# ``ctx.cache`` with the returned buffers and never touches the old ones,
+# so the O(n·width) cols block aliases in place instead of doubling the
+# fit's resident footprint (graphcheck GRC005 pins the aliasing in the
+# lowered program).  Under ``mode="none"`` the cache is a leafless None
+# and the donation is a no-op.
 @functools.partial(jax.jit,
                    static_argnames=("backend", "metric", "batch_size",
                                     "delta", "sampling", "baseline", "k",
-                                    "mode", "free_rounds"))
+                                    "mode", "free_rounds"),
+                   donate_argnums=(2,))
 def _build_fused(data, subkeys, cache, dwarm, perm, spidx=None, spw=None,
                  valid=None, n_valid=None, log_term=None, *, backend: str,
                  metric: str, batch_size: int, delta: float, sampling: str,
@@ -468,10 +475,16 @@ def _swap_iter(data, medoids, med_mask, key, cache, dwarm, perm, perm_idx,
             fresh, sr.n_evals_cached, n_changed, sr.used_exact, accept)
 
 
+# Donations: the PIC ring (arg 4) and the carried swap moments (arg 9)
+# are consumed by each iteration and replaced by its outputs — the driver
+# reassigns ``ctx.cache``/``carry`` and never reads the old buffers, so
+# both alias in place.  First iterations pass ``carry=None`` (leafless,
+# donation no-op) and trace separately from the steady state anyway.
 _swap_iter_jit = jax.jit(
     _swap_iter, static_argnames=("backend", "metric", "batch_size", "delta",
                                  "k", "sampling", "baseline", "early_stop",
-                                 "mode", "free_rounds"))
+                                 "mode", "free_rounds"),
+    donate_argnums=(4, 9))
 
 
 # ---------------------------------------------------------------------------
@@ -488,6 +501,12 @@ _swap_iter_jit = jax.jit(
 # reproduce the loop of single fits exactly — while the whole batch is
 # still one dispatch, one compilation, and no per-fit host sync.
 
+# NOT donated: the stacked [B, n, width] ring rides the ``lax.map`` scan
+# as per-lane xs/ys, and XLA materialises scan outputs by dynamic-update-
+# slice into a fresh stacked buffer — the input ring cannot alias it
+# (donating anyway just emits "donated buffers were not usable").  The
+# single-fit drivers, whose cache is a plain argument/result pair, DO
+# donate; graphcheck GRC005 pins that split (docs/design.md #10).
 @functools.partial(jax.jit,
                    static_argnames=("backend", "metric", "batch_size",
                                     "delta", "sampling", "baseline", "k",
@@ -1088,9 +1107,10 @@ class BanditPAM:
         else:
             wcap, pidx_c, pw_c = 0, None, None
 
-        ckeys, bkeys, skeys, bpk, spk = _batch_rng_chains(
-            jnp.asarray(seeds), k=k, T=T)
-        bkeys, skeys = np.asarray(bkeys), np.asarray(skeys)
+        with host_stage("fit_batch staging: per-fit RNG chain replication"):
+            ckeys, bkeys, skeys, bpk, spk = _batch_rng_chains(
+                jnp.asarray(seeds), k=k, T=T)
+            bkeys, skeys = np.asarray(bkeys), np.asarray(skeys)
 
         def tiled(perm_np, width):
             return np.tile(perm_np, -(-width // perm_np.shape[-1])
@@ -1099,22 +1119,25 @@ class BanditPAM:
         by_n: dict = {}
         for i, n_i in enumerate(ns):
             by_n.setdefault(n_i, []).append(i)
-        for n_i, idxs in by_n.items():
-            ii = np.asarray(idxs)
-            if pic:
-                # one fixed permutation per fit, from the context key
-                perms = np.asarray(_batch_perms(ckeys[ii], n=n_i))
-                sp_pic[ii] = tiled(perms, rb)
-                pidx_c[ii] = tiled(perms, wcap * B)
-                pw_c[ii] = np.arange(wcap * B) < n_i
-            else:
-                # one permutation per search: k BUILD + T SWAP, batched
-                pkeys = jnp.concatenate(
-                    [bpk[ii].reshape(-1, 2), spk[ii].reshape(-1, 2)])
-                perms = np.asarray(_batch_perms(pkeys, n=n_i))
-                g = len(ii)
-                sp_build[ii] = tiled(perms[:g * k].reshape(g, k, n_i), rb)
-                sp_swap[ii] = tiled(perms[g * k:].reshape(g, T, n_i), rb)
+        with host_stage("fit_batch staging: per-fit reference permutations"):
+            for n_i, idxs in by_n.items():
+                ii = np.asarray(idxs)
+                if pic:
+                    # one fixed permutation per fit, from the context key
+                    perms = np.asarray(_batch_perms(ckeys[ii], n=n_i))
+                    sp_pic[ii] = tiled(perms, rb)
+                    pidx_c[ii] = tiled(perms, wcap * B)
+                    pw_c[ii] = np.arange(wcap * B) < n_i
+                else:
+                    # one permutation per search: k BUILD + T SWAP, batched
+                    pkeys = jnp.concatenate(
+                        [bpk[ii].reshape(-1, 2), spk[ii].reshape(-1, 2)])
+                    perms = np.asarray(_batch_perms(pkeys, n=n_i))
+                    g = len(ii)
+                    sp_build[ii] = tiled(perms[:g * k].reshape(g, k, n_i),
+                                         rb)
+                    sp_swap[ii] = tiled(perms[g * k:].reshape(g, T, n_i),
+                                        rb)
         for i, n_i in enumerate(ns):
             spw[i] = np.arange(rb) < n_i
         d_b = [self.delta if self.delta is not None
@@ -1124,28 +1147,31 @@ class BanditPAM:
         # bit-for-bit the expression adaptive_search folds at trace time,
         # jnp.float32(jnp.log(1.0 / d)): the reciprocal in f64, the cast
         # and the log in f32 — vectorised to two dispatches for the batch
-        log_b[:] = np.asarray(jnp.log(jnp.asarray(
-            1.0 / np.asarray(d_b, np.float64), jnp.float32)))
-        log_s[:] = np.asarray(jnp.log(jnp.asarray(
-            1.0 / np.asarray(d_s, np.float64), jnp.float32)))
+        with host_stage("fit_batch staging: folded log(1/delta) terms"):
+            log_b[:] = np.asarray(jnp.log(jnp.asarray(
+                1.0 / np.asarray(d_b, np.float64), jnp.float32)))
+            log_s[:] = np.asarray(jnp.log(jnp.asarray(
+                1.0 / np.asarray(d_s, np.float64), jnp.float32)))
 
         # The batched FitContext: same container as the single-fit path,
         # leading [batch] axis on every array field (batch > 0).
-        ctx = FitContext(
-            mode="pic" if pic else "none", backend=backend,
-            perm_idx=None if pidx_c is None else jnp.asarray(pidx_c),
-            perm_w=None if pw_c is None else jnp.asarray(pw_c),
-            cache=(PicCache(
-                cols=jnp.zeros((bf, n_max, wcap * B), jnp.float32),
-                hw=jnp.zeros((bf,), jnp.int32),
-                fresh_pos=jnp.zeros((bf,), jnp.uint32)) if pic else None),
-            batch=bf, valid=jnp.asarray(valid),
-            n_valid=jnp.asarray(ns, jnp.int32),
-            log_build=jnp.asarray(log_b), log_swap=jnp.asarray(log_s),
-            spidx_build=jnp.asarray(sp_pic if pic else sp_build),
-            spidx_swap=jnp.asarray(sp_pic if pic else sp_swap),
-            spw=jnp.asarray(spw))
-        dataj = jnp.asarray(data)
+        with host_stage("fit_batch staging: batched context + data upload"):
+            ctx = FitContext(
+                mode="pic" if pic else "none", backend=backend,
+                perm_idx=None if pidx_c is None else jnp.asarray(pidx_c),
+                perm_w=None if pw_c is None else jnp.asarray(pw_c),
+                cache=(PicCache(
+                    cols=jnp.zeros((bf, n_max, wcap * B), jnp.float32),
+                    hw=jnp.zeros((bf,), jnp.int32),
+                    fresh_pos=jnp.zeros((bf,), jnp.uint32)) if pic else None),
+                batch=bf, valid=jnp.asarray(valid),
+                n_valid=jnp.asarray(ns, jnp.int32),
+                log_build=jnp.asarray(log_b), log_swap=jnp.asarray(log_s),
+                spidx_build=jnp.asarray(sp_pic if pic else sp_build),
+                spidx_swap=jnp.asarray(sp_pic if pic else sp_swap),
+                spw=jnp.asarray(spw))
+            dataj = jnp.asarray(data)
+            bkeys_j, skeys_j = jnp.asarray(bkeys), jnp.asarray(skeys)
         disp: dict = {}
         kw = dict(backend=backend, metric=self.metric, batch_size=B,
                   delta=self.delta, sampling=self.sampling,
@@ -1154,7 +1180,7 @@ class BanditPAM:
         t0 = time.perf_counter()
         bphase = counted_dispatch(_build_batch, disp, "build")
         (med_mask, medoids, cache, rounds_a, evals_a, cached_a) = bphase(
-            dataj, jnp.asarray(bkeys), ctx.cache, ctx.spidx_build, ctx.spw,
+            dataj, bkeys_j, ctx.cache, ctx.spidx_build, ctx.spw,
             ctx.valid, ctx.n_valid, ctx.log_build, **kw)
         jax.block_until_ready(medoids)
         ctx.cache = cache
@@ -1165,7 +1191,7 @@ class BanditPAM:
         sphase = counted_dispatch(_swap_batch, disp, "swap")
         (meds_f, loss_f, conv, iters, fresh_s, cached_s, nchg_s, exact_s,
          old_a, new_a, loss_a, acc_a) = sphase(
-             dataj, medoids, med_mask, jnp.asarray(skeys), ctx.cache,
+             dataj, medoids, med_mask, skeys_j, ctx.cache,
              ctx.perm_idx, ctx.perm_w, ctx.spidx_swap, ctx.spw, ctx.valid,
              ctx.n_valid, ctx.log_swap, sampling=self.sampling,
              early_stop=self.swap_early_stop, max_swaps=T, **kw)
@@ -1173,17 +1199,24 @@ class BanditPAM:
         wall["swap"] = time.perf_counter() - t0
 
         # -- per-fit ledger assembly (host ints: no uint32 wrap) ---------
-        meds_np, loss_np = np.asarray(meds_f), np.asarray(loss_f)
-        conv_np, iters_np = np.asarray(conv), np.asarray(iters, np.int64)
-        rounds_np = np.asarray(rounds_a, np.int64)
-        bev_np = np.asarray(evals_a, np.int64)
-        bca_np = np.asarray(cached_a, np.int64)
-        fresh_np, cached_np = (np.asarray(fresh_s, np.int64),
-                               np.asarray(cached_s, np.int64))
-        nchg_np, exact_np = (np.asarray(nchg_s, np.int64),
-                             np.asarray(exact_s, np.int64))
-        old_np, new_np = np.asarray(old_a), np.asarray(new_a)
-        la_np, acc_np = np.asarray(loss_a), np.asarray(acc_a)
+        # ONE explicit device→host read for the whole batch: every
+        # medoid/loss/ledger array comes back in a single device_get, so
+        # the batch driver mirrors the single-fit guard contract (one
+        # dispatch per phase + sanctioned reads only).
+        (meds_np, loss_np, conv_np, iters_np, rounds_np, bev_np, bca_np,
+         fresh_np, cached_np, nchg_np, exact_np, old_np, new_np, la_np,
+         acc_np) = host_read(
+            (meds_f, loss_f, conv, iters, rounds_a, evals_a, cached_a,
+             fresh_s, cached_s, nchg_s, exact_s, old_a, new_a, loss_a,
+             acc_a))
+        iters_np = np.asarray(iters_np, np.int64)
+        rounds_np = np.asarray(rounds_np, np.int64)
+        bev_np = np.asarray(bev_np, np.int64)
+        bca_np = np.asarray(bca_np, np.int64)
+        fresh_np, cached_np = (np.asarray(fresh_np, np.int64),
+                               np.asarray(cached_np, np.int64))
+        nchg_np, exact_np = (np.asarray(nchg_np, np.int64),
+                             np.asarray(exact_np, np.int64))
         reports = []
         for i, n_i in enumerate(ns):
             scale = n_i if pic else 1

@@ -204,8 +204,10 @@ class MedoidService:
                                "or restore()")
 
     def _assign(self, X) -> Tuple[np.ndarray, np.ndarray]:
+        # request_chunk only bounds transform(): the assignment path is
+        # chunk-free streaming (its chunk= kwarg is deprecated).
         return assign_medoids(X, self.medoid_points, self.metric,
-                              backend=self.backend, chunk=self.request_chunk)
+                              backend=self.backend)
 
     def predict(self, X) -> np.ndarray:
         """``[m, d]`` queries → ``[m]`` medoid labels (one cached-closure

@@ -199,6 +199,24 @@ def test_transfer_guard_warm_start(fit_guard, blobs):
     assert report.medoids.tolist() == cold.medoids.tolist()
 
 
+def test_transfer_guard_fit_batch(fit_guard, blobs):
+    """The batched multi-fit path under transfer_guard("disallow"):
+    staging is spanned by host_stage, ledgers leave in ONE host_read,
+    and the whole batch costs {"build": 1, "swap": 1} dispatches."""
+    from repro.core.banditpam import BanditPAM
+    est = BanditPAM(3, seed=0, reuse="pic")
+    # ragged lane sizes exercise the padded staging path
+    datasets = [blobs, blobs[:150], blobs[:97]]
+    batch = fit_guard.fit_batch(est, datasets, seeds=[0, 1, 2])
+    assert batch.dispatches_by_phase == {"build": 1, "swap": 1}
+    # per-fit parity with the single-fit path still holds guarded:
+    # medoids to the bit; the final loss reduction on a ragged (padded)
+    # lane is allowed a last-bit difference (test_multifit contract)
+    solo = BanditPAM(3, seed=1, reuse="pic").fit(blobs[:150])
+    assert batch[1].medoids.tolist() == solo.medoids.tolist()
+    np.testing.assert_allclose(batch[1].loss, solo.loss, rtol=1e-5)
+
+
 def test_trace_guard_actually_guards(trace_guard):
     import jax.numpy as jnp
     x = jnp.arange(4)

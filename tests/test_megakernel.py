@@ -17,6 +17,7 @@ Four surfaces under test:
   ``jit(...).lower().compile().memory_analysis()``.
 """
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -275,11 +276,19 @@ def test_assign_medoids_streaming():
                                   np.asarray(jnp.argmin(dmat, axis=1)))
     np.testing.assert_allclose(dmin, jnp.min(dmat, axis=1), rtol=1e-5,
                                atol=1e-5)
-    # legacy chunk knob must not change the answer (it is ignored)
-    l2, m2 = predict.assign_medoids(np.asarray(x), med, "l2",
-                                    backend="jnp", chunk=64)
+    # legacy chunk knob: deprecated (warns once per process), still
+    # ignored — the answer must not change
+    predict._chunk_deprecation_warned = False
+    with pytest.warns(DeprecationWarning, match="chunk"):
+        l2, m2 = predict.assign_medoids(np.asarray(x), med, "l2",
+                                        backend="jnp", chunk=64)
     np.testing.assert_array_equal(labels, l2)
     np.testing.assert_array_equal(dmin, m2)
+    # ... and exactly once: the second passing call stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        predict.assign_medoids(np.asarray(x), med, "l2", backend="jnp",
+                               chunk=64)
     # closure cache: one compiled variant per (k, d, metric, backend, rows)
     assert predict.get_assign_fn(k, d, "l2", "jnp", 2048) is \
         predict.get_assign_fn(k, d, "l2", "jnp", 2048)
@@ -291,9 +300,16 @@ def test_assign_medoids_streaming():
 
 # ---------------------------------------------------------------------------
 # Compiled peak-memory regression gate (satellite: CI memory check)
+#
+# The byte thresholds are NOT local constants: they are the GRC001
+# budget declarations in repro.analysis.graph.budgets, the same bounds
+# `python -m repro.analysis.graph` enforces — the gate and the analyzer
+# cannot drift apart.
 # ---------------------------------------------------------------------------
 
-N_BIG, D_BIG, K_BIG = 200_000, 16, 256
+from repro.analysis.graph import budgets  # noqa: E402
+
+N_BIG, D_BIG, K_BIG = budgets.N_BIG, budgets.D_BIG, budgets.K_BIG
 
 
 def _temp_bytes(fn, *args):
@@ -310,38 +326,38 @@ def _big_specs():
 
 def test_total_loss_holds_no_nk_block():
     x, med = _big_specs()
-    block = N_BIG * K_BIG * 4
 
     def materialised(data, medoids):
         dmat = get_metric("l2")(data, data[medoids])
         return jnp.sum(jnp.min(dmat, axis=1))
 
     # the gate must be meaningful: the materialised graph really does
-    # hold the O(n·k) block ...
-    assert _temp_bytes(materialised, x, med) >= block
-    # ... and the streaming dispatch holds well under a tenth of it
+    # hold the O(n·k) block the budget is a tenth of ...
+    assert _temp_bytes(materialised, x, med) >= N_BIG * K_BIG * 4
+    # ... and the streaming dispatch stays under the declared budget
     streaming = _temp_bytes(
         functools.partial(engine.total_loss, metric="l2"), x, med)
-    assert streaming < block // 10
+    assert streaming <= budgets.budget_bytes("engine.total_loss"), \
+        budgets.budget_doc("engine.total_loss")
 
 
 def test_medoid_cache_holds_no_nk_block():
     x, med = _big_specs()
-    block = N_BIG * K_BIG * 4
     streaming = _temp_bytes(
         functools.partial(engine.medoid_cache, metric="l2"), x, med)
-    assert streaming < block // 10
+    assert streaming <= budgets.budget_bytes("engine.medoid_cache"), \
+        budgets.budget_doc("engine.medoid_cache")
 
 
 def test_exact_fallback_holds_no_chunk_block():
     x = jax.ShapeDtypeStruct((N_BIG, D_BIG), jnp.float32)
     dn = jax.ShapeDtypeStruct((N_BIG,), jnp.float32)
     be = engine.get_stats_backend("jnp")
-    block = N_BIG * engine._EXACT_CHUNK * 4     # pre-streaming scan temp
     streaming = _temp_bytes(
         lambda data, dnear: engine.exact_build_means(be, data, dnear,
                                                      metric="l2"), x, dn)
-    assert streaming < block // 10
+    assert streaming <= budgets.budget_bytes("engine.exact_build_means"), \
+        budgets.budget_doc("engine.exact_build_means")
 
 
 # ---------------------------------------------------------------------------

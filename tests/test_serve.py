@@ -236,7 +236,7 @@ def test_predict_paths_match_reference():
     for m in (1, 7, 200):
         got = medoid_distances(X[:m], med, "l2", backend="jnp", chunk=64)
         np.testing.assert_allclose(got, ref[:m], rtol=1e-6, atol=1e-6)
-    labels, dmin = assign_medoids(X, med, "l2", backend="jnp", chunk=64)
+    labels, dmin = assign_medoids(X, med, "l2", backend="jnp")
     assert np.array_equal(labels, ref.argmin(axis=1))
     np.testing.assert_allclose(dmin, ref.min(axis=1), rtol=1e-6)
 
